@@ -1,0 +1,162 @@
+"""One benchmark per paper table/figure (CPU-scaled sizes, same design).
+
+Paper §4 (Table I design):
+  Fig 1 (a,b,c)   ARE vs workers for k / n / skew sweeps
+  Fig 2 + Tab II  runtime & speedup vs workers (OpenMP analogue)
+  Fig 3           fractional overhead (reduction time / local-pass time)
+  Tab III/IV+Fig4 flat vs hierarchical (MPI vs hybrid MPI/OpenMP analogue)
+  Fig 5/6         scalar formulation vs TPU-native chunked formulation
+                  (the Xeon-vs-Phi §4.4 result, reproduced constructively)
+
+All benches print ``name,value,derived`` CSV rows through run.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (init_summary, pad_stream, parallel_spacesaving,
+                        reduce_summaries, spacesaving_chunked,
+                        spacesaving_scan)
+from repro.core.combine import _pad_pow2, combine
+from repro.core.exact import evaluate
+from repro.core.parallel import local_summaries
+from repro.data.synthetic import zipf_stream
+
+
+def _timeit(fn, *args, repeat=3):
+    fn(*args)                      # compile
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Fig 1 — ARE sweeps (k, n, skew) × workers
+# ---------------------------------------------------------------------------
+
+def fig1_are(emit):
+    n0 = 400_000
+    for p in [1, 4, 16]:
+        for k in [500, 1000, 2000]:
+            s = zipf_stream(n0, 1.1, seed=0, max_id=10**7)
+            summ = parallel_spacesaving(jnp.asarray(s), k=k, p=p,
+                                        chunk_size=2048)
+            m = evaluate(summ, s, 1000)
+            emit(f"fig1a_are_p{p}_k{k}", m.are,
+                 f"prec={m.precision:.3f};rec={m.recall:.3f}")
+    for p in [1, 4, 16]:
+        for n in [100_000, 400_000, 1_000_000]:
+            s = zipf_stream(n, 1.1, seed=1, max_id=10**7)
+            summ = parallel_spacesaving(jnp.asarray(s), k=2000, p=p,
+                                        chunk_size=2048)
+            m = evaluate(summ, s, 1000)
+            emit(f"fig1b_are_p{p}_n{n}", m.are,
+                 f"prec={m.precision:.3f};rec={m.recall:.3f}")
+    for p in [1, 4, 16]:
+        for skew in [1.1, 1.8]:
+            s = zipf_stream(n0, skew, seed=2, max_id=10**7)
+            summ = parallel_spacesaving(jnp.asarray(s), k=2000, p=p,
+                                        chunk_size=2048)
+            m = evaluate(summ, s, 1000)
+            emit(f"fig1c_are_p{p}_skew{skew}", m.are,
+                 f"prec={m.precision:.3f};rec={m.recall:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 / Tab II — scaling with workers; Fig 3 — fractional overhead
+# ---------------------------------------------------------------------------
+
+def fig2_scaling(emit):
+    n = 1_000_000
+    s = jnp.asarray(zipf_stream(n, 1.1, seed=3, max_id=10**7))
+    t1 = None
+    for p in [1, 2, 4, 8, 16]:
+        t_local = _timeit(lambda: jax.block_until_ready(
+            local_summaries(s, p=p, k=2000, chunk_size=2048)))
+        stacked = local_summaries(s, p=p, k=2000, chunk_size=2048)
+        t_reduce = _timeit(lambda: jax.block_until_ready(
+            reduce_summaries(stacked))) if p > 1 else 0.0
+        total = t_local + t_reduce
+        t1 = t1 or total
+        emit(f"fig2_runtime_p{p}", total,
+             f"items_per_s={n/total:.3e};speedup_vs_p1={t1/total:.2f}")
+        # Fig 3: fractional overhead = reduction / local pass
+        emit(f"fig3_frac_overhead_p{p}",
+             t_reduce / max(t_local, 1e-12), f"k=2000")
+    # paper finding: overhead grows with k
+    for k in [500, 2000, 8000]:
+        stacked = local_summaries(s, p=8, k=k, chunk_size=2048)
+        t_reduce = _timeit(lambda: jax.block_until_ready(
+            reduce_summaries(stacked)))
+        emit(f"fig3_reduce_time_k{k}", t_reduce, "p=8")
+
+
+# ---------------------------------------------------------------------------
+# Tab III/IV + Fig 4 — flat vs hierarchical reduction
+# ---------------------------------------------------------------------------
+
+def tab34_hybrid(emit):
+    """Communication model of the two reductions at pod scale + measured
+    merge времени on-stack. Wire bytes per rank per reduction:
+      flat all-gather tree: P·(3k ints) gathered to every rank
+      hierarchical butterfly: log2(d)·3k intra-pod + log2(pods)·3k cross-pod
+    (cross-pod hops are the expensive DCN ones — the paper's hybrid win)."""
+    k = 2000
+    entry = 3 * 4  # items, counts, errors int32
+    for pods, per_pod in [(1, 256), (2, 256)]:
+        p = pods * per_pod
+        flat_bytes = p * k * entry
+        hier_cross = int(np.log2(pods)) * k * entry if pods > 1 else 0
+        hier_intra = int(np.log2(per_pod)) * k * entry
+        emit(f"tab34_flat_bytes_p{p}", flat_bytes, "per-rank allgather")
+        emit(f"tab34_hier_bytes_p{p}", hier_intra + hier_cross,
+             f"cross_pod_bytes={hier_cross}")
+    # measured: two-level vs single tree on stacked summaries (32 ranks)
+    s = jnp.asarray(zipf_stream(400_000, 1.1, seed=4, max_id=10**7))
+    stacked = local_summaries(s, p=32, k=k, chunk_size=2048)
+    t_flat = _timeit(lambda: jax.block_until_ready(reduce_summaries(stacked)))
+
+    def two_level(st):
+        groups = jax.tree.map(lambda a: a.reshape(4, 8, -1), st)
+        intra = jax.vmap(lambda g: reduce_summaries(
+            jax.tree.map(lambda a: a, g)))(groups)
+        return reduce_summaries(intra)
+
+    t_hier = _timeit(lambda: jax.block_until_ready(two_level(stacked)))
+    emit("tab34_flat_tree_s", t_flat, "32 ranks, k=2000")
+    emit("tab34_two_level_s", t_hier, "4 pods × 8 ranks")
+
+
+# ---------------------------------------------------------------------------
+# Fig 5/6 — formulation comparison (the §4.4 hardware-adaptation result)
+# ---------------------------------------------------------------------------
+
+def fig56_formulation(emit):
+    """Scalar per-item scan (the hash-table-style formulation that cannot
+    exploit wide vector units — the 'Phi port') vs the chunked
+    sort+match+top_k formulation (TPU-native). Same machine, same
+    guarantees; the reformulation is the win."""
+    n = 200_000
+    s = jnp.asarray(zipf_stream(n, 1.1, seed=5, max_id=10**7))
+    for k in [500, 2000]:
+        init = init_summary(k)
+        t_scan = _timeit(lambda: jax.block_until_ready(
+            spacesaving_scan(init, s)))
+        padded = pad_stream(s, 2048)
+        t_chunk = _timeit(lambda: jax.block_until_ready(
+            spacesaving_chunked(init, padded, chunk_size=2048)))
+        emit(f"fig56_scalar_scan_k{k}", t_scan,
+             f"items_per_s={n/t_scan:.3e}")
+        emit(f"fig56_chunked_k{k}", t_chunk,
+             f"items_per_s={n/t_chunk:.3e};speedup={t_scan/t_chunk:.1f}x")
+
+
+ALL = [fig1_are, fig2_scaling, tab34_hybrid, fig56_formulation]

@@ -1,0 +1,101 @@
+"""Render §Roofline / §Dry-run tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(tag: str = "", mesh: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        if f.endswith(".error.json"):
+            continue
+        d = json.load(open(f))
+        if d.get("tag", "") != tag:
+            continue
+        if mesh and d.get("mesh") != mesh:
+            continue
+        recs.append(d)
+    return recs
+
+
+def roofline_table(tag: str = "", mesh: str = "single") -> str:
+    rows = []
+    for d in load(tag, mesh):
+        if "skipped" in d:
+            rows.append((d["arch"], d["shape"], "—", "—", "—", "—", "—",
+                         d["skipped"]))
+            continue
+        r = d["roofline"]
+        rows.append((d["arch"], d["shape"],
+                     f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+                     f"{r['collective_s']:.4f}",
+                     r["bottleneck"].replace("_s", ""),
+                     f"{(d['useful_flops_ratio'] or 0):.2f}", ""))
+    rows.sort()
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | note |")
+    sep = "|" + "---|" * 8
+    body = "\n".join("| " + " | ".join(str(c) for c in row) + " |"
+                     for row in rows)
+    return "\n".join([hdr, sep, body])
+
+
+def dryrun_table(tag: str = "", mesh: str = "pod") -> str:
+    rows = []
+    for d in load(tag, mesh):
+        if "skipped" in d:
+            rows.append((d["arch"], d["shape"], "SKIP", "—", "—", "—", "—"))
+            continue
+        mem = d["memory"]
+        coll = ", ".join(f"{k}×{round(v['count'])}"
+                         for k, v in sorted(d["collectives"].items()))
+        rows.append((d["arch"], d["shape"],
+                     f"{d['devices']}",
+                     f"{(mem['argument_bytes'])/1e9:.2f}",
+                     f"{d['flops_per_device']:.2e}",
+                     f"{d['wire_bytes_per_device']:.2e}",
+                     coll))
+    rows.sort()
+    hdr = ("| arch | shape | devices | arg GB/dev | FLOPs/dev | "
+           "wire B/dev | collective schedule |")
+    sep = "|" + "---|" * 7
+    body = "\n".join("| " + " | ".join(str(c) for c in row) + " |"
+                     for row in rows)
+    return "\n".join([hdr, sep, body])
+
+
+def compare(cells, tags, mesh="single") -> str:
+    """Before/after table for §Perf: cells=[(arch,shape)], tags=['',opt,…]."""
+    out = []
+    hdr = "| cell | tag | compute_s | memory_s | collective_s | bound_s | useful |"
+    out.append(hdr)
+    out.append("|" + "---|" * 7)
+    by_key = {}
+    for tag in tags:
+        for d in load(tag, mesh):
+            if "skipped" in d:
+                continue
+            by_key[(d["arch"], d["shape"], tag)] = d
+    for arch, shape in cells:
+        for tag in tags:
+            d = by_key.get((arch, shape, tag))
+            if not d:
+                continue
+            r = d["roofline"]
+            out.append(
+                f"| {arch}×{shape} | {tag or 'baseline'} | "
+                f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                f"{r['collective_s']:.4f} | {r['step_lower_bound_s']:.4f} | "
+                f"{(d['useful_flops_ratio'] or 0):.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Roofline (single pod, baseline)\n")
+    print(roofline_table())
+    print("\n## Dry-run (multi-pod)\n")
+    print(dryrun_table())

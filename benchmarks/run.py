@@ -1,0 +1,55 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV. Paper-accuracy/scaling benches run the
+real algorithms at CPU-scaled sizes; the roofline section summarizes the
+dry-run artifacts (results/dryrun) if present.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,tab34,fig56,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_benches as P
+
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    selected = {
+        "fig1": P.fig1_are,
+        "fig2": P.fig2_scaling,
+        "tab34": P.tab34_hybrid,
+        "fig56": P.fig56_formulation,
+    }
+    for key, fn in selected.items():
+        if only and key not in only:
+            continue
+        fn(emit)
+
+    if only is None or "roofline" in only:
+        try:
+            from benchmarks.roofline import load
+            recs = [d for d in load("", "single") if "skipped" not in d]
+            for d in recs:
+                r = d["roofline"]
+                emit(f"roofline_{d['arch']}_{d['shape']}",
+                     r["step_lower_bound_s"],
+                     f"bottleneck={r['bottleneck']};useful="
+                     f"{(d['useful_flops_ratio'] or 0):.2f}")
+        except Exception as e:   # dry-run artifacts absent
+            print(f"roofline,skipped,{type(e).__name__}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

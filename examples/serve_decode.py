@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + decode loop, KV
+cache management, and hot-token Space Saving telemetry.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "qwen2.5-14b", "--smoke",
+                "--batch", "4", "--prompt-len", "64", "--gen", "32",
+                "--report-every", "16"]
+    main(defaults + args)

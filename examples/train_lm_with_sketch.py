@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the Space Saving token sketch integrated in every step.
+
+This wraps the production launcher (repro.launch.train) — checkpointing,
+resume, sketch merges and the final exact-oracle validation all engage.
+Reduce --steps for a faster demo.
+
+  PYTHONPATH=src python examples/train_lm_with_sketch.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "mamba2-130m", "--smoke",
+                "--steps", "200", "--batch", "8", "--seq", "256",
+                "--ckpt-every", "50", "--merge-every", "25",
+                "--log-every", "10", "--ckpt-dir", "checkpoints/example"]
+    main(defaults + args)

@@ -1,0 +1,134 @@
+"""Sharded checkpoint/restore with elastic resharding.
+
+Layout (one directory per step):
+  <dir>/step_000123/
+    manifest.json        — step, flat param paths, shapes/dtypes, data cursor
+    arrays.npz           — one entry per pytree leaf (host-gathered)
+    _COMPLETE            — commit marker (atomic-rename publication)
+
+Fault-tolerance contract:
+  * writes are atomic: a crash mid-save can never corrupt the latest
+    checkpoint (tmp dir + rename, _COMPLETE written last);
+  * restore picks the newest COMPLETE step, verifies shapes, and
+    device_puts every leaf with the *target* plan's shardings — restarting
+    on a different mesh (elastic up/down-scaling) is a first-class path;
+  * the Space Saving token sketch survives group-count changes by a
+    COMBINE reduction (merging is lossless w.r.t. the summary bounds —
+    DESIGN.md §5), so telemetry is preserved across elastic restarts.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Summary, reduce_summaries
+from repro.core.spacesaving import EMPTY
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir, step: int, state, data_state: dict | None = None,
+         keep: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    paths, leaves, _ = _flatten(state)
+    arrays = {}
+    dtypes = []
+    for i, a in enumerate(leaves):
+        arr = np.asarray(jax.device_get(a))
+        dtypes.append(str(arr.dtype))
+        if arr.dtype == jnp.bfloat16:      # npz can't round-trip bf16
+            arr = arr.view(np.uint16)
+        arrays[f"leaf_{i}"] = arr
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "shapes": [list(np.shape(a)) for a in arrays.values()],
+        "dtypes": dtypes,
+        "data_state": data_state or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "_COMPLETE").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+
+    complete = sorted(d for d in ckpt_dir.glob("step_*")
+                      if (d / "_COMPLETE").exists())
+    for old in complete[:-keep]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(int(d.name.split("_")[1]) for d in ckpt_dir.glob("step_*")
+                   if (d / "_COMPLETE").exists())
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, like_state, shardings=None):
+    """Rebuild ``like_state``'s pytree from disk, placing leaves with
+    ``shardings`` (a matching pytree of NamedSharding or None)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    assert (d / "_COMPLETE").exists(), f"incomplete checkpoint {d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+
+    paths, leaves, treedef = _flatten(like_state)
+    assert manifest["paths"] == paths, "checkpoint/state structure mismatch"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+
+    out = []
+    for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+        a = arrays[f"leaf_{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        tgt_dtype = ref.dtype
+        if a.dtype != tgt_dtype:
+            a = a.astype(tgt_dtype)
+        if tuple(a.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {paths[i]}: ckpt {a.shape} vs state {ref.shape} — "
+                f"reshape via elastic helpers first")
+        out.append(jax.device_put(a, shd) if shd is not None
+                   else jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["data_state"]
+
+
+# ---------------------------------------------------------------------------
+# Elastic helpers
+# ---------------------------------------------------------------------------
+
+def reshard_token_sketch(sketch: Summary, new_groups: int) -> Summary:
+    """Re-group a (G, k) token sketch for a different mesh size.
+
+    COMBINE is the paper's merge operator: reducing all old groups and
+    seeding group 0 of the new layout preserves every summary bound (the
+    other groups restart empty and re-fill from the live stream).
+    """
+    k = sketch.items.shape[-1]
+    merged = reduce_summaries(sketch)
+    items = jnp.full((new_groups, k), EMPTY, jnp.int32).at[0].set(merged.items)
+    counts = jnp.zeros((new_groups, k), merged.counts.dtype).at[0].set(
+        merged.counts)
+    errors = jnp.zeros((new_groups, k), merged.errors.dtype).at[0].set(
+        merged.errors)
+    return Summary(items, counts, errors)

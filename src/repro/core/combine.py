@@ -1,0 +1,102 @@
+"""The paper's COMBINE operator (Algorithm 2), vectorized.
+
+COMBINE merges two Space Saving summaries S1, S2 into one that is a valid
+summary for the concatenation of their input streams (error bounds preserved;
+Cafaro, Pulimeno, Tempesta, Inf. Sci. 2016):
+
+    m1/m2 = min frequency of S1/S2   (0 if the summary has free counters)
+    x in both:      f̂ = f̂1 + f̂2         ε = ε1 + ε2
+    x only in S1:   f̂ = f̂1 + m2          ε = ε1 + m2
+    x only in S2:   f̂ = f̂2 + m1          ε = ε2 + m1
+    keep the k largest counters.
+
+The hash-table FIND/REMOVE of the paper becomes a dense match matrix
+(k × k equality + masked reductions) and the final prune is ``lax.top_k`` —
+no data-dependent control flow, so the operator vmaps/shards freely and is
+usable as an operand of tree/butterfly reductions over mesh axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spacesaving import (EMPTY, Summary, merge_pool, min_frequency)
+
+
+def combine(s1: Summary, s2: Summary) -> Summary:
+    """Merge two summaries with the same number of counters k."""
+    assert s1.k == s2.k, (s1.k, s2.k)
+    m1 = min_frequency(s1)
+    m2 = min_frequency(s2)
+
+    valid1 = s1.items != EMPTY
+    valid2 = s2.items != EMPTY
+    # eq[i, j] = S1 counter i and S2 counter j monitor the same item
+    eq = (s1.items[:, None] == s2.items[None, :]) & valid1[:, None] & valid2[None, :]
+    matched1 = eq.any(axis=1)
+    matched2 = eq.any(axis=0)
+    f2_for_1 = (eq * s2.counts[None, :]).sum(axis=1).astype(s1.counts.dtype)
+    e2_for_1 = (eq * s2.errors[None, :]).sum(axis=1).astype(s1.errors.dtype)
+
+    # S1 side: in-both gets +f̂2, S1-only gets +m2 (empty slots stay 0).
+    add_c1 = jnp.where(matched1, f2_for_1, m2)
+    add_e1 = jnp.where(matched1, e2_for_1, m2)
+    upd = Summary(
+        items=s1.items,
+        counts=jnp.where(valid1, s1.counts + add_c1, 0),
+        errors=jnp.where(valid1, s1.errors + add_e1, 0),
+    )
+
+    # S2 side: only unmatched items survive as candidates (+m1).
+    cand_valid = valid2 & ~matched2
+    neg1 = jnp.asarray(-1, s2.counts.dtype)
+    cand = (
+        jnp.where(cand_valid, s2.items, EMPTY),
+        jnp.where(cand_valid, s2.counts + m1, neg1),
+        jnp.where(cand_valid, s2.errors + m1, 0),
+    )
+    return merge_pool(upd, *cand)
+
+
+def empty_like(s: Summary) -> Summary:
+    """The COMBINE identity (all counters free)."""
+    return Summary(
+        items=jnp.full_like(s.items, EMPTY),
+        counts=jnp.zeros_like(s.counts),
+        errors=jnp.zeros_like(s.errors),
+    )
+
+
+def _pad_pow2(stacked: Summary) -> Summary:
+    p = stacked.items.shape[0]
+    pow2 = 1 << (p - 1).bit_length()
+    if pow2 == p:
+        return stacked
+    extra = pow2 - p
+
+    def pad(a, fill):
+        pad_block = jnp.full((extra,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, pad_block], axis=0)
+
+    return Summary(items=pad(stacked.items, EMPTY),
+                   counts=pad(stacked.counts, 0),
+                   errors=pad(stacked.errors, 0))
+
+
+def reduce_summaries(stacked: Summary) -> Summary:
+    """Reduce a stack of P summaries (leading axis) to one, log₂(P) rounds.
+
+    Each round pairs the first half with the second half and merges with a
+    vmapped COMBINE — the on-device analogue of the paper's ParallelReduction
+    when the summaries already live in one address space (e.g. after an
+    all_gather, or the per-thread summaries of the OpenMP version).
+    P is padded to a power of two with empty summaries (the identity).
+    """
+    stacked = _pad_pow2(stacked)
+    cur = stacked
+    while cur.items.shape[0] > 1:
+        half = cur.items.shape[0] // 2
+        s1 = jax.tree.map(lambda a: a[:half], cur)
+        s2 = jax.tree.map(lambda a: a[half:], cur)
+        cur = jax.vmap(combine)(s1, s2)
+    return jax.tree.map(lambda a: a[0], cur)

@@ -1,0 +1,74 @@
+"""Exact counting oracle + the paper's evaluation metrics.
+
+The paper reports (§4): Average Relative Error over the reported items'
+frequencies, precision (reported ∩ true / reported) and recall
+(reported ∩ true / true). The exact pass is the off-line verification scan
+the paper mentions for the non-streaming setting.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.spacesaving import EMPTY, Summary
+
+
+class Metrics(NamedTuple):
+    are: float        # average relative error over reported items
+    precision: float
+    recall: float
+    n_true: int
+    n_reported: int
+
+
+def exact_counts(stream: np.ndarray) -> dict[int, int]:
+    items, counts = np.unique(np.asarray(stream), return_counts=True)
+    return {int(i): int(c) for i, c in zip(items, counts) if i != EMPTY}
+
+
+def true_heavy_hitters(stream: np.ndarray, k_majority: int) -> dict[int, int]:
+    n = int((np.asarray(stream) != EMPTY).sum())
+    thresh = n // k_majority + 1
+    return {i: c for i, c in exact_counts(stream).items() if c >= thresh}
+
+
+def evaluate(summary: Summary, stream: np.ndarray, k_majority: int,
+             reported_mask: np.ndarray | None = None) -> Metrics:
+    """Score a summary against the exact oracle (paper §4 metrics)."""
+    stream = np.asarray(stream)
+    items = np.asarray(summary.items)
+    counts = np.asarray(summary.counts)
+    n = int((stream != EMPTY).sum())
+    thresh = n // k_majority + 1
+    if reported_mask is None:
+        reported_mask = (items != EMPTY) & (counts >= thresh)
+    reported = {int(i): int(c) for i, c in zip(items[reported_mask],
+                                               counts[reported_mask])}
+    truth = true_heavy_hitters(stream, k_majority)
+    exact = exact_counts(stream)
+
+    hits = [i for i in reported if i in truth]
+    precision = len(hits) / len(reported) if reported else 1.0
+    recall = len(hits) / len(truth) if truth else 1.0
+    rel_errors = [abs(reported[i] - exact.get(i, 0)) / max(exact.get(i, 0), 1)
+                  for i in reported]
+    are = float(np.mean(rel_errors)) if rel_errors else 0.0
+    return Metrics(are=are, precision=precision, recall=recall,
+                   n_true=len(truth), n_reported=len(reported))
+
+
+def overestimation_violations(summary: Summary, stream: np.ndarray) -> int:
+    """# monitored items violating f ≤ f̂ ≤ f + ε (must be 0)."""
+    exact = exact_counts(stream)
+    items = np.asarray(summary.items)
+    counts = np.asarray(summary.counts)
+    errors = np.asarray(summary.errors)
+    bad = 0
+    for i, c, e in zip(items, counts, errors):
+        if i == EMPTY:
+            continue
+        f = exact.get(int(i), 0)
+        if not (f <= c <= f + e):
+            bad += 1
+    return bad

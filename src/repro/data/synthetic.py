@@ -1,0 +1,82 @@
+"""Synthetic data: zipfian streams (the paper's input distribution) and
+LM token batches drawn from the same family.
+
+The paper evaluates on zipf(1.1)/zipf(1.8) streams of up to 29e9 items
+(Table I). We reproduce the same distributions at CPU-tractable sizes for
+the accuracy benchmarks, and reuse zipf tokens for LM training batches —
+natural-language token frequencies are themselves zipfian, which is exactly
+why a Space Saving token sketch is a sensible telemetry feature.
+
+The iterator carries an explicit (seed, position) cursor so the data
+pipeline is checkpointable and exactly resumable (fault tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def zipf_stream(n: int, skew: float, seed: int = 0,
+                max_id: int | None = None) -> np.ndarray:
+    """n zipf(skew) item ids (int32, ≥ 1). Matches the paper's generator."""
+    rng = np.random.default_rng(seed)
+    out = rng.zipf(skew, size=n)
+    if max_id is not None:
+        out = np.minimum(out, max_id)
+    return out.astype(np.int32)
+
+
+@dataclasses.dataclass
+class DataState:
+    """Checkpointable pipeline cursor."""
+    seed: int
+    step: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+class TokenStream:
+    """Deterministic, resumable synthetic LM batches.
+
+    Each step derives its own PRNG from (seed, step) — resuming from a
+    checkpoint at step k reproduces exactly the batches k, k+1, ... with no
+    replay of the first k (O(1) restore).
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int, skew: float = 1.1,
+                 state: DataState | None = None):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq
+        self.skew = skew
+        self.state = state or DataState(seed=1234, step=0)
+
+    def next(self) -> dict:
+        rng = np.random.default_rng((self.state.seed, self.state.step))
+        toks = rng.zipf(self.skew, size=(self.batch, self.seq + 1))
+        toks = np.minimum(toks, self.vocab - 1).astype(np.int32)
+        self.state = DataState(self.state.seed, self.state.step + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def extras(self, cfg) -> dict:
+        """Stub modality inputs (whisper frames / vlm patches)."""
+        rng = np.random.default_rng((self.state.seed, self.state.step, 7))
+        out = {}
+        if cfg.family == "audio":
+            out["frames"] = rng.standard_normal(
+                (self.batch, cfg.enc_dec.n_frames, cfg.d_model)).astype(
+                np.float32) * 0.02
+        if cfg.vlm is not None:
+            out["vision_embeds"] = rng.standard_normal(
+                (self.batch, cfg.vlm.n_patches, cfg.d_model)).astype(
+                np.float32) * 0.02
+            pos = np.broadcast_to(np.arange(self.seq)[None, None],
+                                  (3, self.batch, self.seq))
+            out["positions"] = pos.astype(np.int32)
+        return out

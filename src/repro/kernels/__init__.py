@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the Space Saving hot spots (+ jnp oracles).
+
+ss_match.py — match-count matrix (merge inner loop), ss_query.py — batched
+frequency queries. ops.py holds the jit'd dispatching wrappers; ref.py the
+pure-jnp references used both as test oracles and as the non-TPU fast path.
+"""

@@ -1,0 +1,68 @@
+"""Jit'd public wrappers for the Space Saving kernels.
+
+Dispatch policy (``impl``):
+  * ``'auto'``   — Pallas on TPU, pure-jnp reference elsewhere. Interpret-mode
+                   Pallas executes the kernel body per grid step in Python, so
+                   on CPU the vectorized jnp path is both the oracle and the
+                   fast path; on TPU the Pallas kernels control VMEM tiling.
+  * ``'pallas'`` — force the kernel (interpret=True off-TPU): used by tests.
+  * ``'jnp'``    — force the reference.
+
+Both wrappers pad inputs to block multiples (EMPTY ids / zero weights are
+match-neutral) and strip the padding from the outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.ss_match import match_weights_pallas
+from repro.kernels.ss_query import query_pallas
+
+EMPTY = -1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad1(a: jax.Array, mult: int, fill) -> jax.Array:
+    rem = (-a.shape[0]) % mult
+    if rem == 0:
+        return a
+    return jnp.concatenate([a, jnp.full((rem,), fill, a.dtype)])
+
+
+def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
+                  *, impl: str = "auto", block_k: int = 512, block_c: int = 512):
+    """See kernels/ss_match.py. Returns (add_w (k,), matched (c,) bool)."""
+    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+        return _ref.match_weights_ref(s_items, h_items, h_weights)
+    k, c = s_items.shape[0], h_items.shape[0]
+    bk = min(block_k, max(8, 1 << (k - 1).bit_length()))
+    bc = min(block_c, max(128, 1 << (c - 1).bit_length()))
+    sp = _pad1(s_items, bk, EMPTY)
+    hp = _pad1(h_items, bc, EMPTY)
+    wp = _pad1(h_weights.astype(jnp.int32), bc, 0)
+    add_w, matched = match_weights_pallas(
+        sp, hp, wp, block_k=bk, block_c=bc, interpret=not _on_tpu())
+    return add_w[:k].astype(h_weights.dtype), matched[:c]
+
+
+def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
+          block_k: int = 512, block_q: int = 512):
+    """See kernels/ss_query.py. Returns (f̂, ε, monitored) per query."""
+    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+        return _ref.query_ref(s_items, s_counts, s_errors, queries)
+    k, q = s_items.shape[0], queries.shape[0]
+    bk = min(block_k, max(8, 1 << (k - 1).bit_length()))
+    bq = min(block_q, max(128, 1 << (q - 1).bit_length()))
+    sp = _pad1(s_items, bk, EMPTY)
+    cp = _pad1(s_counts.astype(jnp.int32), bk, 0)
+    ep = _pad1(s_errors.astype(jnp.int32), bk, 0)
+    qp = _pad1(queries, bq, EMPTY)
+    f_hat, eps, mon = query_pallas(
+        sp, cp, ep, qp, block_k=bk, block_q=bq, interpret=not _on_tpu())
+    return (f_hat[:q].astype(s_counts.dtype), eps[:q].astype(s_errors.dtype),
+            mon[:q])

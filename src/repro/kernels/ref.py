@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+These are also the implementations used on non-TPU backends (``impl='jnp'``):
+they are fully vectorized XLA programs, so on CPU they are *faster* than
+interpret-mode Pallas, while on TPU the Pallas kernels win by tiling the
+match matrix through VMEM explicitly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = -1
+
+
+def match_weights_ref(s_items: jax.Array, h_items: jax.Array,
+                      h_weights: jax.Array):
+    """(add_w, matched):  add_w[i] = Σ_j [s_i == h_j]·w_j,  matched[j] = ∃i.
+
+    ``s_items`` (k,) summary item ids; ``h_items``/``h_weights`` (c,) an exact
+    histogram (distinct items). EMPTY entries on either side never match.
+    """
+    eq = (s_items[:, None] == h_items[None, :])
+    eq &= (s_items != EMPTY)[:, None]
+    eq &= (h_items != EMPTY)[None, :]
+    add_w = (eq * h_weights[None, :]).sum(axis=1).astype(h_weights.dtype)
+    matched = eq.any(axis=0)
+    return add_w, matched
+
+
+def query_ref(s_items: jax.Array, s_counts: jax.Array, s_errors: jax.Array,
+              queries: jax.Array):
+    """(f̂, ε, monitored) for each query id against the summary."""
+    eq = (s_items[:, None] == queries[None, :])
+    eq &= (s_items != EMPTY)[:, None]
+    monitored = eq.any(axis=0)
+    f_hat = (eq * s_counts[:, None]).sum(axis=0).astype(s_counts.dtype)
+    eps = (eq * s_errors[:, None]).sum(axis=0).astype(s_errors.dtype)
+    return f_hat, eps, monitored

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the REAL jitted step (train / prefill / serve)
+against ShapeDtypeStruct inputs on the production mesh, compiles it, and
+records memory_analysis / cost_analysis / the collective schedule into
+results/dryrun/<arch>__<shape>__<mesh>.json. Failures here are sharding
+bugs in the system — the matrix must be green.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import hlo_analysis as HA
+from repro.launch import inputs as I
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding.rules import PlanOptions, ShardingPlan
+from repro.train import steps as S
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_path(arch, shape, mesh_kind, tag=""):
+    suffix = f"__{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh_kind: str,
+               opts: PlanOptions = PlanOptions(), schedule: str = "masked",
+               tag: str = "", donate: bool = False, cfg_overrides=None):
+    import dataclasses
+    cfg = get_arch(arch_name)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return {"skipped": "pure full-attention arch (DESIGN.md §4)",
+                "arch": arch_name, "shape": shape_name, "mesh": mesh_kind}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
+    plan = ShardingPlan(cfg, mesh, opts)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step = S.make_train_step(cfg, plan, schedule=schedule)
+        state_shapes = S.train_state_shapes(cfg, plan)
+        state_shard = S.train_state_shardings(cfg, plan)
+        batch_shapes = I.train_batch_shapes(cfg, shape)
+        batch_shard = S.batch_shardings(cfg, plan, batch_shapes)
+        jitted = jax.jit(step, in_shardings=(state_shard, batch_shard),
+                         out_shardings=(state_shard, None),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_shapes, batch_shapes)
+        tokens_per_step = shape.global_batch * shape.seq_len
+        flops_factor = 6
+    elif shape.kind == "prefill":
+        step = S.make_prefill_step(cfg, plan, schedule=schedule)
+        pshapes = M.param_shapes(cfg)
+        pshard = plan.param_specs(M.param_axes(cfg), pshapes)
+        batch_shapes = I.prefill_batch_shapes(cfg, shape)
+        batch_shard = S.batch_shardings(cfg, plan, batch_shapes)
+        jitted = jax.jit(step, in_shardings=(pshard, batch_shard))
+        lowered = jitted.lower(pshapes, batch_shapes)
+        tokens_per_step = shape.global_batch * shape.seq_len
+        flops_factor = 2
+    else:  # decode
+        step = S.make_serve_step(cfg, plan)
+        pshapes = M.param_shapes(cfg)
+        pshard = plan.param_specs(M.param_axes(cfg), pshapes)
+        dec = I.decode_input_shapes(cfg, shape)
+        cache_shard = S.cache_shardings(cfg, plan, dec["cache"])
+        b = shape.global_batch
+        tok_shard = NamedSharding(mesh, plan.batch_spec(b))
+        g = S.sketch_groups(plan)
+        from repro.train import sketch as SK
+        sk_shapes = SK.token_sketch_shapes(cfg.sketch.k_counters, g)
+        sk_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, plan.sketch_spec()), sk_shapes)
+        jitted = jax.jit(
+            step, in_shardings=(pshard, cache_shard, tok_shard, None, sk_shard),
+            donate_argnums=(1, 4) if donate else ())
+        lowered = jitted.lower(pshapes, dec["cache"], dec["tokens"],
+                               jax.ShapeDtypeStruct((), jnp.int32), sk_shapes)
+        tokens_per_step = shape.global_batch
+        flops_factor = 2
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    ana = HA.analyze(hlo)
+    colls = ana["collectives"]
+    wire = sum(c["wire_bytes"] for c in colls.values())
+    flops_dev = float(ana["flops"])
+    bytes_dev = float(ana["bytes"])
+
+    n_params = M.param_count(cfg)
+    n_active = M.param_count(cfg, active_only=True)
+    model_flops = flops_factor * n_active * tokens_per_step
+    terms = HA.roofline_terms(flops_dev, bytes_dev, wire)
+
+    rec = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "devices": int(n_dev), "tag": tag,
+        "schedule": schedule, "moe_strategy": opts.moe_strategy,
+        "donate": donate, "cfg_overrides": cfg_overrides or {},
+        "xla_cost_raw": {"flops": float(cost.get("flops", 0.0)),
+                         "bytes": float(cost.get("bytes accessed", 0.0))},
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collectives": colls, "wire_bytes_per_device": wire,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "n_params": n_params, "n_active_params": n_active,
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / flops_dev
+        if flops_dev else None,
+        "roofline": terms,
+    }
+    return rec
+
+
+def run_cell(arch, shape, mesh_kind, skip_existing=False, tag="",
+             opts=PlanOptions(), schedule="masked", donate=False,
+             cfg_overrides=None):
+    out = _cell_path(arch, shape, mesh_kind, tag)
+    if skip_existing and out.exists():
+        print(f"[skip-existing] {out.name}")
+        return True
+    out.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        rec = lower_cell(arch, shape, mesh_kind, opts=opts, schedule=schedule,
+                         tag=tag, donate=donate, cfg_overrides=cfg_overrides)
+        out.write_text(json.dumps(rec, indent=1))
+        err_file = out.with_suffix(".error.json")
+        if err_file.exists():
+            err_file.unlink()
+        status = "SKIP" if "skipped" in rec else \
+            f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s " \
+            f"bottleneck={rec['roofline']['bottleneck']}"
+        print(f"[{arch} × {shape} × {mesh_kind}{('×'+tag) if tag else ''}] {status}",
+              flush=True)
+        return True
+    except Exception as e:
+        err = {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        out.with_suffix(".error.json").write_text(json.dumps(err, indent=1))
+        print(f"[{arch} × {shape} × {mesh_kind}] FAIL {type(e).__name__}: "
+              f"{str(e)[:400]}", flush=True)
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--moe-strategy", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--seq-sharded-residual", action="store_true")
+    ap.add_argument("--no-tp", action="store_true")
+    ap.add_argument("--schedule", default="masked", choices=["masked", "band"])
+    ap.add_argument("--auto", action="store_true",
+                    help="per-arch optimized policy distilled from §Perf: "
+                         "band schedule, tile remat, seq-sharded residual, "
+                         "local-dispatch EP MoE, donation; nested remat for "
+                         "big dense archs; pure-DP for <1B-param archs")
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--attn-remat-tiles", action="store_true")
+    ap.add_argument("--remat", default=None,
+                    help="override cfg.remat, e.g. nested:8")
+    ap.add_argument("--embed-rows-local", action="store_true")
+    ap.add_argument("--q-head-pad", type=int, default=0,
+                    help="zero-init q heads added per KV group (§Perf)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.attn_remat_tiles:
+        overrides["attn_remat_tiles"] = True
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.embed_rows_local:
+        overrides["embed_rows_local"] = True
+    if args.q_head_pad:
+        overrides["q_head_pad"] = args.q_head_pad
+
+    meshes = ["single", "pod"] if args.mesh == "both" else [args.mesh]
+    opts = PlanOptions(moe_strategy=args.moe_strategy,
+                       seq_sharded_residual=args.seq_sharded_residual,
+                       no_tp=args.no_tp)
+
+    if args.all:
+        # small archs first so pipeline bugs surface fast
+        order = ["mamba2-130m", "whisper-tiny", "qwen2.5-14b", "minicpm3-4b",
+                 "mixtral-8x7b", "qwen3-moe-30b-a3b", "yi-34b", "zamba2-7b",
+                 "qwen2-vl-72b", "qwen1.5-110b"]
+        n_ok = n_fail = 0
+        for mesh_kind in meshes:
+            n_dev = 512 if mesh_kind == "pod" else 256
+            for arch in order:
+                for shape in SHAPES:
+                    a_opts, a_over, a_sched, a_donate = \
+                        opts, overrides, args.schedule, args.donate
+                    if args.auto:
+                        cfg = get_arch(arch)
+                        small = M.param_count(cfg) < 1_000_000_000
+                        # pure DP only when the batch can actually occupy
+                        # the whole mesh (else the model axis idles)
+                        no_tp = small and \
+                            SHAPES[shape].global_batch % n_dev == 0
+                        a_opts = PlanOptions(
+                            moe_strategy="ep" if cfg.moe is not None
+                            and cfg.moe.n_experts % 16 == 0 else "tp",
+                            # MLA internals are not seq-constrained yet —
+                            # seqres regressed minicpm3 25× (§Perf note)
+                            seq_sharded_residual=not small
+                            and cfg.mla is None,
+                            no_tp=no_tp)
+                        a_over = dict(overrides)
+                        a_over["attn_remat_tiles"] = cfg.mla is None
+                        a_over["embed_rows_local"] = not small
+                        if cfg.family in ("dense", "vlm") and cfg.moe is None \
+                                and cfg.mla is None:
+                            a_over["remat"] = "nested:8"
+                        # gradient-exact head padding when heads don't
+                        # divide the model axis but one extra per group does
+                        if cfg.mla is None and cfg.family in ("dense", "vlm") \
+                                and cfg.n_heads % 16 != 0:
+                            g = cfg.n_heads // cfg.n_kv_heads
+                            if (cfg.n_kv_heads * (g + 1)) % 16 == 0:
+                                a_over["q_head_pad"] = 1
+                        a_sched = "band"
+                        a_donate = True
+                    ok = run_cell(arch, shape, mesh_kind,
+                                  skip_existing=args.skip_existing, tag=args.tag,
+                                  opts=a_opts, schedule=a_sched,
+                                  donate=a_donate, cfg_overrides=a_over)
+                    n_ok += ok
+                    n_fail += not ok
+        print(f"done: {n_ok} ok, {n_fail} failed")
+        raise SystemExit(1 if n_fail else 0)
+
+    assert args.arch and args.shape
+    ok = run_cell(args.arch, args.shape,
+                  meshes[0] if len(meshes) == 1 else "single",
+                  skip_existing=args.skip_existing, tag=args.tag, opts=opts,
+                  schedule=args.schedule, donate=args.donate,
+                  cfg_overrides=overrides)
+    if len(meshes) == 2:
+        ok &= run_cell(args.arch, args.shape, "pod",
+                       skip_existing=args.skip_existing, tag=args.tag,
+                       opts=opts, schedule=args.schedule, donate=args.donate,
+                       cfg_overrides=overrides)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,399 @@
+"""Roofline-term extraction from compiled HLO — trip-count aware.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned program (scan-over-layers, flash-attention tile scans, SSD chunk
+scans) is undercounted by its trip count. This module parses the
+*post-optimization, partitioned* HLO text instead and attributes costs
+through the call graph:
+
+  flops  — 2·|out|·K for every dot (K = contracting size), conv equivalent;
+           multiplied through enclosing while trip counts
+           (``backend_config known_trip_count``), calls, and fusions.
+           Elementwise FLOPs are excluded by design: the compute roofline
+           term is MXU work; VPU work is captured by the memory term.
+  bytes  — operand+result bytes of every op in executed, non-fused
+           computations (fusion internals don't touch HBM), × multipliers —
+           XLA's own bytes-accessed convention.
+  wire   — collective bytes × ring factors (below), × multipliers.
+
+Wire-byte convention (ring algorithms):
+  all-gather: (g-1)/g · out;  all-reduce: 2·(g-1)/g · out;
+  reduce-scatter: (g-1) · out;  all-to-all: (g-1)/g · out;
+  collective-permute: out.
+
+Conditionals: every branch counted once per enclosing iteration — an
+overcount when a branch is rarely taken (zamba2's shared-attention branch;
+noted in §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota",
+             "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"(\([^=]*?\)|[\w\[\],{}]+)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[":{\\]+n[":\\]+(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "type_str", "kind", "line")
+
+    def __init__(self, name, type_str, kind, line):
+        self.name, self.type_str, self.kind, self.line = \
+            name, type_str, kind, line
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse(hlo: str):
+    comps: dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            mc = _COMP_RE.match(line)
+            if mc and line.rstrip().endswith("{"):
+                cur = mc.group(2)
+                comps[cur] = []
+                if mc.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        md = _DEF_RE.match(line)
+        if md:
+            comps[cur].append(_Op(md.group(1), md.group(2), md.group(3),
+                                  line))
+    return comps, entry
+
+
+def _operand_names(line: str):
+    m = re.search(r"\=\s*[^(]*\s[\w\-]+\((.*)", line)
+    if not m:
+        return []
+    depth = 1
+    args = []
+    buf = ""
+    for ch in m.group(1):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            args.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    if buf.strip():
+        args.append(buf)
+    names = []
+    for a in args:
+        toks = a.strip().split()
+        if toks:
+            names.append(toks[-1].lstrip("%"))
+    return names
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = _parse(hlo_text)
+
+    # name -> (dims, bytes) per computation
+    info_by_comp: dict[str, dict] = {}
+    for cname, ops in comps.items():
+        d = {}
+        for op in ops:
+            msh = _SHAPE_RE.search(op.type_str)
+            dims = [int(x) for x in msh.group(2).split(",") if x] if msh else []
+            d[op.name] = (dims, _shape_bytes(op.type_str))
+        info_by_comp[cname] = d
+
+    # fusion-parameter utilization: when a fused computation consumes a
+    # parameter ONLY through slicing ops (dynamic-slice/slice/gather), the
+    # fusion reads the slice, not the whole buffer — critical for loops that
+    # carry stacked per-layer buffers (32 GB carry, 0.7 GB touched/iter).
+    param_charge: dict[str, dict[int, float]] = {}
+    for cname, ops in comps.items():
+        info = info_by_comp[cname]
+        params = {}        # param name -> index
+        for op in ops:
+            if op.kind == "parameter":
+                mi = re.search(r"parameter\((\d+)\)", op.line)
+                if mi:
+                    params[op.name] = int(mi.group(1))
+        if not params:
+            param_charge[cname] = {}
+            continue
+        consumers: dict[str, list] = {p: [] for p in params}
+        for op in ops:
+            if op.kind == "parameter":
+                continue
+            for pos, nm in enumerate(_operand_names(op.line)):
+                if nm in consumers:
+                    consumers[nm].append((op, pos))
+        charge = {}
+        for pname, idx in params.items():
+            full = info[pname][1]
+            cons = consumers[pname]
+
+            def _sliced(op, pos):
+                if op.kind in ("dynamic-slice", "slice", "gather"):
+                    return _shape_bytes(op.type_str)
+                if op.kind == "dynamic-update-slice" and pos == 0:
+                    return 0          # in-place target: aliased, not read
+                return None
+
+            parts = [_sliced(o, p) for o, p in cons]
+            if cons and all(x is not None for x in parts):
+                charge[idx] = max(parts)
+            else:
+                charge[idx] = full
+        param_charge[cname] = charge
+
+    # fusion ROOT that is an in-place dynamic-update-slice writes only the
+    # update region, not the whole carried buffer.
+    root_charge: dict[str, float] = {}
+    for cname, ops in comps.items():
+        if not ops:
+            continue
+        info = info_by_comp[cname]
+        root = next((o for o in ops if "ROOT" in o.line), ops[-1])
+
+        def _dus_bytes(op):
+            names = _operand_names(op.line)
+            upd = info.get(names[1]) if len(names) > 1 else None
+            return 2 * (upd[1] if upd else _shape_bytes(op.type_str))
+
+        if root.kind == "dynamic-update-slice":
+            root_charge[cname] = _dus_bytes(root)
+        elif root.kind == "tuple":
+            total = 0.0
+            by_name = {o.name: o for o in ops}
+            for nm in _operand_names(root.line):
+                o = by_name.get(nm)
+                if o is None:
+                    continue
+                total += _dus_bytes(o) if o.kind == "dynamic-update-slice" \
+                    else _shape_bytes(o.type_str)
+            root_charge[cname] = total
+
+    # execution multiplier (real HBM-touching computations)
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(cname, m):
+        if cname not in comps or m <= 0:
+            return
+        mult[cname] += m
+        for op in comps[cname]:
+            if op.kind == "while":
+                t = _TRIP_RE.search(op.line)
+                trip = float(t.group(1)) if t else 1.0
+                b = _BODY_RE.search(op.line)
+                if b:
+                    visit(b.group(1), m * trip)
+            elif op.kind == "conditional":
+                mb = _BRANCH_RE.search(op.line)
+                if mb:
+                    for br in mb.group(1).split(","):
+                        visit(br.strip().lstrip("%"), m)
+            elif op.kind == "call":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    visit(mc.group(1), m)
+
+    visit(entry, 1.0)
+
+    # fusion-internal flop multiplier (dots fused into kFusion bodies)
+    fus_mult: dict[str, float] = defaultdict(float)
+    frontier = []
+    for cname, m in mult.items():
+        for op in comps[cname]:
+            if op.kind == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    fus_mult[mc.group(1)] += m
+                    frontier.append((mc.group(1), m))
+    while frontier:
+        cname, m = frontier.pop()
+        for op in comps.get(cname, []):
+            if op.kind == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    fus_mult[mc.group(1)] += m
+                    frontier.append((mc.group(1), m))
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    colls = defaultdict(lambda: {"count": 0.0, "bytes": 0.0,
+                                 "wire_bytes": 0.0})
+
+    def dot_flops(op, info):
+        out_el = _elems(op.type_str)
+        k = 1
+        mc = _CONTRACT_RE.search(op.line)
+        names = _operand_names(op.line)
+        if mc and names:
+            lhs = info.get(names[0])
+            if lhs:
+                for idx in mc.group(1).split(","):
+                    if idx and int(idx) < len(lhs[0]):
+                        k *= lhs[0][int(idx)]
+        return 2.0 * out_el * k
+
+    def conv_flops(op, info):
+        out_el = _elems(op.type_str)
+        names = _operand_names(op.line)
+        rhs = info.get(names[-1]) if names else None
+        if not rhs or not rhs[0]:
+            return 2.0 * out_el
+        rhs_el = 1
+        for d in rhs[0]:
+            rhs_el *= d
+        mlab = re.search(r"dim_labels=\S*->(\w+)", op.line)
+        out_feat = 1
+        msh = _SHAPE_RE.search(op.type_str)
+        out_dims = [int(x) for x in msh.group(2).split(",") if x] if msh else []
+        if mlab and out_dims:
+            f_pos = mlab.group(1).find("f")
+            if 0 <= f_pos < len(out_dims):
+                out_feat = out_dims[f_pos]
+        return 2.0 * out_el * rhs_el / max(out_feat, 1)
+
+    for cname, ops in comps.items():
+        m_real = mult.get(cname, 0.0)
+        m_flop = m_real + fus_mult.get(cname, 0.0)
+        info = info_by_comp[cname]
+        for op in ops:
+            if m_flop > 0:
+                if op.kind == "dot":
+                    flops += dot_flops(op, info) * m_flop
+                elif op.kind == "convolution":
+                    flops += conv_flops(op, info) * m_flop
+            if m_real <= 0 or op.kind in _FREE_OPS \
+                    or op.kind in ("while", "conditional", "call"):
+                continue
+            out_b = _shape_bytes(op.type_str)
+            if op.kind in ("dynamic-slice", "gather", "slice"):
+                # reads only the slice, not the whole operand buffer
+                in_b = out_b
+            elif op.kind in ("dynamic-update-slice", "scatter"):
+                # in-place: reads + writes the update region only
+                names = _operand_names(op.line)
+                upd = info.get(names[1]) if len(names) > 1 else None
+                upd_b = upd[1] if upd else out_b
+                bytes_accessed += 2 * upd_b * m_real
+                continue
+            elif op.kind == "fusion":
+                mc2 = _CALLS_RE.search(op.line)
+                fname = mc2.group(1) if mc2 else None
+                charge = param_charge.get(fname, {})
+                in_b = 0
+                for i, nm in enumerate(_operand_names(op.line)):
+                    ent = info.get(nm)
+                    full = ent[1] if ent else 0
+                    in_b += min(charge.get(i, full), full) if ent else 0
+                if fname in root_charge:
+                    out_b = min(root_charge[fname], out_b * 2)
+            else:
+                in_b = 0
+                for nm in _operand_names(op.line):
+                    ent = info.get(nm)
+                    if ent:
+                        in_b += ent[1]
+            bytes_accessed += (out_b + in_b) * m_real
+
+            kind = op.kind.replace("-start", "")
+            if kind in _COLL_OPS:
+                gm = _GROUPS_RE.search(op.line)
+                g = max(len(gm.group(1).split(",")) if gm else 2, 2)
+                ring = (g - 1) / g
+                if kind == "all-reduce":
+                    wire = 2 * ring * out_b
+                elif kind == "reduce-scatter":
+                    wire = (g - 1) * out_b
+                elif kind == "collective-permute":
+                    wire = out_b
+                else:
+                    wire = ring * out_b
+                c = colls[kind]
+                c["count"] += m_real
+                c["bytes"] += out_b * m_real
+                c["wire_bytes"] += wire * m_real
+
+    return {"flops": flops, "bytes": bytes_accessed,
+            "collectives": {k: dict(v) for k, v in colls.items()}}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    return analyze(hlo_text)["collectives"]
+
+
+# TPU v5e hardware constants (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link (~per-chip injection, 1 link)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float) -> dict:
+    t_compute = flops_per_device / PEAK_FLOPS_BF16
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = wire_bytes_per_device / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    terms["bottleneck"] = max(
+        [k for k in ("compute_s", "memory_s", "collective_s")],
+        key=lambda k: terms[k])
+    terms["step_lower_bound_s"] = max(t_compute, t_memory, t_collective)
+    return terms

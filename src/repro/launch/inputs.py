@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation: the dry-run lowers against these, weak-type-correct
+and shardable. Modality frontends are stubs per the assignment — whisper
+gets precomputed frame embeddings, qwen2-vl gets precomputed patch
+embeddings + M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def train_batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch = {"tokens": sd((b, s), jnp.int32), "labels": sd((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = sd((b, cfg.enc_dec.n_frames, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype))
+    if cfg.vlm is not None:
+        batch["vision_embeds"] = sd((b, cfg.vlm.n_patches, cfg.d_model),
+                                    jnp.dtype(cfg.compute_dtype))
+        batch["positions"] = sd((3, b, s), jnp.int32)
+    return batch
+
+
+def prefill_batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return train_batch_shapes(cfg, shape)
+
+
+def decode_input_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    from repro.models.model import cache_shapes
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    return {
+        "tokens": sd((b, 1), jnp.int32),
+        "cache": cache_shapes(cfg, b, s),
+    }
+
+
+def materialize(shapes, key=None, vocab: int | None = None):
+    """Turn ShapeDtypeStructs into real (random/zero) arrays for smoke runs."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def one(path, s):
+        name = jax.tree_util.keystr(path)
+        if s.dtype == jnp.int32:
+            hi = vocab or 1000
+            return jax.random.randint(key, s.shape, 0, hi, jnp.int32)
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    return jax.tree_util.tree_map_with_path(one, shapes)

@@ -1,0 +1,96 @@
+"""Serving driver: batched prefill → decode loop with hot-token telemetry.
+
+The Space Saving sketch rides along as serving telemetry: every decoded
+batch feeds the emitted-token stream; ``--report-every`` merges the sharded
+sketches (paper's ParallelReduction) and prints the current heavy hitters —
+k = O(1) memory regardless of traffic.
+
+  python -m repro.launch.serve --arch mamba2-130m --smoke \
+      --batch 4 --prompt-len 64 --gen 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch, get_smoke_arch
+from repro.core import sort_summary
+from repro.data.synthetic import TokenStream
+from repro.models import model as M
+from repro.sharding.rules import ShardingPlan
+from repro.train import steps as S
+from repro.train import sketch as SK
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--report-every", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    plan = ShardingPlan(cfg, None)
+    max_len = args.prompt_len + args.gen
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    prefill = jax.jit(S.make_prefill_step(cfg, plan))
+    serve = jax.jit(S.make_serve_step(cfg, plan),
+                    static_argnums=(), donate_argnums=(1, 4))
+
+    data = TokenStream(cfg.vocab, args.batch, args.prompt_len)
+    batch = {k: jnp.asarray(v) for k, v in data.next().items()}
+    batch.update({k: jnp.asarray(v) for k, v in data.extras(cfg).items()})
+
+    t0 = time.time()
+    last_logits, cache = prefill(params, batch)
+    # pad the prompt-sized cache out to max_len for the decode loop
+    def pad_seq(a, target, axis):
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, target - a.shape[axis])
+        return jnp.pad(a, pad)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        for k in ("k", "v"):
+            if k in cache:
+                cache[k] = pad_seq(cache[k], max_len, 2)
+        for k in ("c_kv", "k_rope"):
+            if k in cache:
+                cache[k] = pad_seq(cache[k], max_len, 2)
+    if cfg.family == "hybrid":
+        for k in ("shared_k", "shared_v"):
+            cache[k] = pad_seq(cache[k], max_len, 2)
+    print(f"[serve] prefill {args.batch}×{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s")
+
+    sketch = SK.init_token_sketch(cfg.sketch.k_counters, 1)
+    tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+    emitted = []
+    t0 = time.time()
+    for i in range(args.gen):
+        pos = args.prompt_len + i
+        tokens_next, cache, sketch = serve(params, cache, tokens, pos, sketch)
+        emitted.append(np.asarray(tokens_next))
+        tokens = tokens_next[:, None]
+        if (i + 1) % args.report_every == 0:
+            merged = SK.merge_sketches(sketch)
+            top = sort_summary(merged, ascending=False)
+            print(f"  [hot-tokens @ {i+1}] "
+                  + ", ".join(f"{int(a)}:{int(c)}" for a, c in
+                              zip(np.asarray(top.items)[:5],
+                                  np.asarray(top.counts)[:5]) if a >= 0))
+    dt = time.time() - t0
+    print(f"[serve] generated {args.gen}×{args.batch} tokens in {dt:.2f}s "
+          f"({args.gen*args.batch/dt:.1f} tok/s)")
+    print("[serve] sample:", np.stack(emitted, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,322 @@
+"""Attention: blockwise (flash-style) prefill/train path + cached decode path.
+
+The train/prefill path is a memory-efficient online-softmax over (q-block,
+kv-block) tiles implemented with nested ``lax.scan`` — working set is one
+(Bq × Bkv) score tile per step, never the S×S matrix. Two block schedules:
+
+  * ``schedule='masked'``  (baseline): every kv block is visited for every q
+    block and masked — simple, but computes ~2× the causal FLOPs.
+  * ``schedule='band'``    (optimized): enumerates only the (q, kv) pairs
+    inside the causal / sliding-window band (a static list) and merges tiles
+    with a running-max accumulator scattered into per-q-block slots — exact
+    FLOPs up to the half-wasted diagonal tiles. §Perf hillclimb change; both
+    schedules produce identical outputs (tests assert so).
+
+Layouts (see DESIGN.md §5):
+  * train/prefill: FLAT heads — q (B,S,H,hd). The sharding plan puts H on the
+    ``model`` mesh axis; K/V (B,S,KV,hd) are repeated group-wise to H *inside
+    each tile*, so the repeated bytes are tile-sized and land model-sharded.
+  * decode: GROUPED — the (B,S,KV,hd) cache is sequence-sharded (``model``)
+    and never repeated, keeping decode's HBM bytes at true-GQA levels (the
+    decode roofline is bandwidth-bound).
+
+All softmax math is f32; inputs/outputs are the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _head_mask(cfg):
+    """(Hp·hd,) mask — 1 for real q-head slots, 0 for per-group pads."""
+    import numpy as np
+    g_real = cfg.n_heads // cfg.n_kv_heads
+    gp = g_real + cfg.q_head_pad
+    m = np.zeros((cfg.n_kv_heads, gp, cfg.hd), np.float32)
+    m[:, :g_real, :] = 1.0
+    return jnp.asarray(m.reshape(-1))
+
+
+def mask_pad_heads(out, cfg):
+    """Zero the padded heads' attention output (B,S,Hp,hd).
+
+    Required for gradient-exactness: a pad head's softmax output is a
+    (nonzero) value average, so without this mask dL/dwo at the pad rows
+    would be nonzero and the optimizer would drift the pads off zero.
+    """
+    if not cfg.q_head_pad:
+        return out
+    mask = _head_mask(cfg).reshape(cfg.n_q_heads, cfg.hd)
+    return out * mask[None, None].astype(out.dtype)
+
+
+def attn_params(ctx, cfg):
+    d, hd = cfg.d_model, cfg.hd
+    hq, kv = cfg.n_q_heads, cfg.n_kv_heads
+    p = {
+        "wq": ctx.p("wq", (d, hq * hd), "embed,attn_out"),
+        "wk": ctx.p("wk", (d, kv * hd), "embed,kv_out"),
+        "wv": ctx.p("wv", (d, kv * hd), "embed,kv_out"),
+        "wo": ctx.p("wo", (hq * hd, d), "attn_out,embed",
+                    scale=(hq * hd) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.q_head_pad and ctx.mode == "init":
+        # zero the padded q-head slots: zero wo rows ⇒ zero grads ⇒ the
+        # padding is gradient-exact and permanent (DESIGN/§Perf head-pad).
+        mask = _head_mask(cfg)
+        p["wq"] = p["wq"] * mask[None, :].astype(p["wq"].dtype)
+        p["wo"] = p["wo"] * mask[:, None].astype(p["wo"].dtype)
+    if cfg.qkv_bias:
+        p["bq"] = ctx.p("bq", (hq * hd,), "attn_out", init="zeros")
+        p["bk"] = ctx.p("bk", (kv * hd,), "kv_out", init="zeros")
+        p["bv"] = ctx.p("bv", (kv * hd,), "kv_out", init="zeros")
+    return p
+
+
+def project_qkv(p, x, cfg, x_kv=None):
+    """x (B,S,D) -> q (B,S,Hp,hd) flat (incl. pads), k/v (B,Skv,KV,hd)."""
+    b, s, _ = x.shape
+    x_kv = x if x_kv is None else x_kv
+    s_kv = x_kv.shape[1]
+    hq, kv, hd = cfg.n_q_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return (q.reshape(b, s, hq, hd), k.reshape(b, s_kv, kv, hd),
+            v.reshape(b, s_kv, kv, hd))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (sequences like whisper's 1500
+    frames aren't powers of two)."""
+    if n <= target:
+        return n
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _repeat_kv(x, g):
+    """(B,C,KV,hd) -> (B,C,KV*g,hd) by group-wise repetition."""
+    if g == 1:
+        return x
+    return jnp.repeat(x, g, axis=2)
+
+
+def _tile(q_blk, k_blk, v_blk, q_pos, kv_pos, causal, window, scale, g):
+    """One (Bq × Bkv) online-softmax tile. Returns (m, l, acc) partials."""
+    k_rep = _repeat_kv(k_blk, g).astype(jnp.float32)
+    v_rep = _repeat_kv(v_blk, g).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32), k_rep) * scale
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B,H,q)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p, v_rep)
+    return m, l, acc
+
+
+def _merge_tiles(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        block_q=512, block_kv=512, q_offset=0,
+                        schedule="masked", remat_tiles=False):
+    """q (B,Sq,H,hd); k,v (B,Skv,KV,hd) -> out (B,Sq,H,hd).
+
+    ``q_offset`` positions the query block within the kv sequence (for
+    chunked prefill). Blocks must divide the sequence lengths.
+
+    ``remat_tiles``: checkpoint each (q,kv) tile — without it, scan's vjp
+    saves every tile's probability matrix for the backward pass, i.e. the
+    full O(S²) score tensor in chunks (§Perf iteration: the dominant memory
+    term for all train cells). With it, tiles are recomputed in the bwd.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                      # MLA: value dim ≠ qk dim
+    g = h // kvh
+    block_q = _pick_block(sq, block_q)
+    block_kv = _pick_block(skv, block_kv)
+    nq, nkv = sq // block_q, skv // block_kv
+    scale = hd ** -0.5
+    tile_fn = jax.checkpoint(_tile, static_argnums=(5, 6, 7, 8)) \
+        if remat_tiles else _tile
+
+    qb = jnp.moveaxis(q.reshape(b, nq, block_q, h, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nkv, block_kv, kvh, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, block_kv, kvh, hd_v), 1, 0)
+
+    if schedule == "band":
+        assert block_q == block_kv and q_offset % block_q == 0
+        return _band_schedule(qb, kb, vb, causal=causal, window=window,
+                              q_offset=q_offset, scale=scale, g=g,
+                              remat_tiles=remat_tiles)
+
+    def per_q(_, qi_blk):
+        qi, q_blk = qi_blk
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def inner(carry, ki_blk):
+            ki, k_blk, v_blk = ki_blk
+            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            m2, l2, a2 = tile_fn(q_blk, k_blk, v_blk, q_pos, kv_pos,
+                                 causal, window, scale, g)
+            return _merge_tiles(*carry, m2, l2, a2), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, hd_v), jnp.float32)
+        (m, l, acc), _ = lax.scan(inner, (m0, l0, a0),
+                                  (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,H,q,hd_v)
+        return None, out
+
+    _, outs = lax.scan(per_q, None, (jnp.arange(nq), qb))     # (nq,B,H,bq,hd_v)
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, hd_v)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)            # (B,Sq,H,hd_v)
+
+
+def _band_schedule(qb, kb, vb, *, causal, window, q_offset, scale, g,
+                   remat_tiles=False):
+    """Exact-FLOPs schedule: scan only the (qi, ki) tiles inside the band."""
+    nq, b, block_q, h, hd = qb.shape
+    nkv, _, block_kv, kvh, hd_v = vb.shape
+    off_blocks = q_offset // block_q if q_offset else 0
+
+    pairs = []
+    for qi in range(nq):
+        hi = qi + off_blocks if causal else nkv - 1
+        lo = 0
+        if window is not None:
+            lo = max(0, (qi * block_q + q_offset - window) // block_kv)
+        for ki in range(lo, min(hi, nkv - 1) + 1):
+            pairs.append((qi, ki))
+    qi_arr = jnp.asarray([p[0] for p in pairs])
+    ki_arr = jnp.asarray([p[1] for p in pairs])
+
+    m0 = jnp.full((nq, b, h, block_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, h, block_q), jnp.float32)
+    a0 = jnp.zeros((nq, b, h, block_q, hd_v), jnp.float32)
+    tile_fn = jax.checkpoint(_tile, static_argnums=(5, 6, 7, 8)) \
+        if remat_tiles else _tile
+
+    def step(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair
+        q_blk = qb[qi]
+        k_blk, v_blk = kb[ki], vb[ki]
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+        kv_pos = ki * block_kv + jnp.arange(block_kv)
+        m2, l2, a2 = tile_fn(q_blk, k_blk, v_blk, q_pos, kv_pos,
+                             causal, window, scale, g)
+        mm, ll, aa = _merge_tiles(m[qi], l[qi], acc[qi], m2, l2, a2)
+        return (m.at[qi].set(mm), l.at[qi].set(ll), acc.at[qi].set(aa)), None
+
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (qi_arr, ki_arr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]               # (nq,B,H,bq,hd_v)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, nq * block_q, hd_v)
+    return jnp.moveaxis(out, 1, 2).astype(qb.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None):
+    """q (B,1,H,hd); caches (B,S,KV,hd); cache_len — # valid positions.
+
+    GROUPED einsum (no KV repeat): decode is HBM-bandwidth-bound on the cache
+    read, so bytes stay at true-GQA levels. With the cache's S dim sharded
+    (sequence parallelism) SPMD turns the softmax reductions into
+    partial-reduce + all-reduce automatically.
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    s = k_cache.shape[1]
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqKGh,bkKh->bKGqk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(s)
+    mask = pos < cache_len
+    if window is not None:
+        mask &= pos >= cache_len - window
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bKGqk,bkKh->bqKGh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
+
+
+def decode_attention_plus_one(q, k_cache, v_cache, k_new, v_new, position,
+                              *, window=None):
+    """Decode attention where the NEW token's kv is supplied separately.
+
+    The cache is read-only (positions < ``position``); the current token's
+    (k_new, v_new) (B,1,KV,hd) is merged into the softmax analytically.
+    This lets the serving step keep the cache out of the layer scan's
+    carry/ys — the per-token cache traffic drops from O(L·S) (full rewrite)
+    to O(L) (one slice write outside the scan). §Perf decode iteration.
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    s = k_cache.shape[1]
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    s_old = jnp.einsum("bqKGh,bkKh->bKGqk", qg,
+                       k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = pos < position                       # strictly old positions
+    if window is not None:
+        mask &= pos > position - window
+    s_old = jnp.where(mask[None, None, None, None, :], s_old, NEG_INF)
+    s_new = jnp.einsum("bqKGh,bkKh->bKGqk", qg,
+                       k_new.astype(jnp.float32)) * scale   # (B,KV,G,1,1)
+
+    m = jnp.maximum(jnp.max(s_old, axis=-1, keepdims=True), s_new)
+    p_old = jnp.where(mask[None, None, None, None, :],
+                      jnp.exp(s_old - m), 0.0)
+    p_new = jnp.exp(s_new - m)
+    denom = jnp.sum(p_old, -1, keepdims=True) + p_new
+    out = jnp.einsum("bKGqk,bkKh->bqKGh", p_old,
+                     v_cache.astype(jnp.float32))
+    out = out + p_new.reshape(b, 1, kvh, g, 1) \
+        * v_new.astype(jnp.float32)[:, :, :, None, :]
+    out = out / denom.reshape(b, 1, kvh, g, 1)
+    return out.astype(q.dtype).reshape(b, 1, h, v_cache.shape[-1])
+
+
+def merge_heads(x):
+    """(B,S,H,hd) -> (B,S,H*hd)."""
+    b, s = x.shape[:2]
+    return x.reshape(b, s, -1)

@@ -1,0 +1,134 @@
+"""Parameter construction + common layers (pure functions, no framework).
+
+Parameters are nested dicts of arrays built through :class:`Ctx`, which runs
+the SAME construction code in three modes so arrays, ShapeDtypeStructs (for
+the allocation-free dry-run) and logical sharding axes can never drift:
+
+  * ``mode='init'``  — materialized arrays (RNG per-leaf via fold_in)
+  * ``mode='shape'`` — jax.ShapeDtypeStruct stand-ins
+  * ``mode='axes'``  — comma-joined logical axis names per dim, e.g.
+                       ``"layers,embed,ff"`` (resolved to PartitionSpecs by
+                       sharding/rules.py)
+
+Layer stacks destined for ``lax.scan`` get a leading ``layers`` dim via
+:func:`stacked`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _stable_hash(s: str) -> int:
+    return int.from_bytes(hashlib.md5(s.encode()).digest()[:4], "little")
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    mode: str                  # init | shape | axes
+    key: jax.Array | None
+    dtype: jnp.dtype
+    prefix: str = ""
+
+    def sub(self, name: str) -> "Ctx":
+        return dataclasses.replace(self, prefix=f"{self.prefix}/{name}")
+
+    def with_key(self, key) -> "Ctx":
+        return dataclasses.replace(self, key=key)
+
+    def p(self, name: str, shape: tuple, axes: str, *, init: str = "normal",
+          scale: float | None = None, dtype=None):
+        dtype = dtype or self.dtype
+        assert len(axes.split(",")) == len(shape), (name, shape, axes)
+        if self.mode == "axes":
+            return axes
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        k = jax.random.fold_in(self.key, _stable_hash(f"{self.prefix}/{name}"))
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) == 1 else shape[-2]
+                scale = fan_in ** -0.5
+            return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+        if init == "uniform":  # U[0,1); used for SSM dt bias-like params
+            return jax.random.uniform(k, shape, jnp.float32).astype(dtype)
+        raise ValueError(init)
+
+
+def stacked(ctx: Ctx, n: int, fn: Callable[[Ctx], dict]) -> dict:
+    """Build ``n`` copies of ``fn``'s params stacked on a ``layers`` dim."""
+    if ctx.mode == "axes":
+        one = fn(ctx)
+        return jax.tree.map(lambda a: "layers," + a, one)
+    if ctx.mode == "shape":
+        one = fn(ctx)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+    keys = jax.random.split(ctx.key, n)
+    return jax.vmap(lambda k: fn(ctx.with_key(k)))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Norms / MLPs / embeddings (functional)
+# ---------------------------------------------------------------------------
+
+def norm_params(ctx: Ctx, name: str, d: int, norm_type: str) -> dict:
+    p = {f"{name}_scale": ctx.p(f"{name}_scale", (d,), "norm", init="ones")}
+    if norm_type == "layernorm":
+        p[f"{name}_bias"] = ctx.p(f"{name}_bias", (d,), "norm", init="zeros")
+    return p
+
+
+def apply_norm(p: dict, name: str, x: jax.Array, norm_type: str,
+               eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p[f"{name}_scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p[f"{name}_scale"].astype(jnp.float32) \
+            + p[f"{name}_bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mlp_params(ctx: Ctx, d: int, f: int, act: str) -> dict:
+    p = {}
+    if act == "silu":  # SwiGLU
+        p["w_gate"] = ctx.p("w_gate", (d, f), "embed,ff")
+        p["w_up"] = ctx.p("w_up", (d, f), "embed,ff")
+    else:
+        p["w_up"] = ctx.p("w_up", (d, f), "embed,ff")
+        p["b_up"] = ctx.p("b_up", (f,), "ff", init="zeros")
+        p["b_down"] = ctx.p("b_down", (d,), "norm", init="zeros")
+    p["w_down"] = ctx.p("w_down", (f, d), "ff,embed")
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str, wsc=None) -> jax.Array:
+    wsc = wsc or (lambda a, _: a)
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = wsc(h, "btf")
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"].astype(x.dtype))
+    h = wsc(h, "btf")
+    return h @ p["w_down"] + p["b_down"].astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings (n, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(n)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1).astype(dtype)

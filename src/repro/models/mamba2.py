@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked scan + O(1) decode.
+
+Training/prefill uses the SSD chunked algorithm: within a chunk of length Q
+the recurrence is computed as a (masked, decay-weighted) attention-like
+einsum — dense MXU work; across chunks a short ``lax.scan`` carries the
+(H, N, P) state. Decode is the plain single-step recurrence against a
+constant-size state — which is why the ssm/hybrid archs own the long_500k
+cell (DESIGN.md §4).
+
+Shapes: d_inner = expand·d_model, H = d_inner/headdim heads of dim P,
+state size N, G groups sharing B/C projections (Hg = H/G heads per group).
+All SSD math in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + h
+    return d_inner, h, conv_dim, d_in_proj
+
+
+def mamba_params(ctx, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, conv_dim, d_in_proj = ssm_dims(cfg)
+    return {
+        "in_proj": ctx.p("in_proj", (d, d_in_proj), "embed,ssm_in"),
+        "conv_w": ctx.p("conv_w", (s.d_conv, conv_dim), "convk,ssm_conv"),
+        "conv_b": ctx.p("conv_b", (conv_dim,), "ssm_conv", init="zeros"),
+        "A_log": ctx.p("A_log", (h,), "ssm_heads", init="zeros"),
+        "D": ctx.p("D", (h,), "ssm_heads", init="ones"),
+        "dt_bias": ctx.p("dt_bias", (h,), "ssm_heads", init="uniform"),
+        "gate_norm_scale": ctx.p("gate_norm_scale", (d_inner,), "norm", init="ones"),
+        "out_proj": ctx.p("out_proj", (d_inner, d), "ssm_inner,embed"),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_inner, h, _, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg):
+    s = cfg.ssm
+    d_inner, h, _, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :d_inner]
+    b_ = xbc[..., d_inner:d_inner + gn]
+    c_ = xbc[..., d_inner + gn:]
+    return xs, b_, c_
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,L,C), w (K,C), b (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w[:, None, :],                     # (K, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    out = yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_scan(xs, dt, a, b_, c_, chunk, h_init=None):
+    """SSD chunked recurrence.
+
+    xs (B,L,H,P) f32; dt (B,L,H) f32 (post-softplus); a (H,) negative;
+    b_/c_ (B,L,G,N) f32. Returns (y (B,L,H,P), h_final (B,G,Hg,N,P)).
+    """
+    bsz, l, h, p = xs.shape
+    g, n = b_.shape[-2:]
+    hg = h // g
+    q = min(chunk, l)
+    assert l % q == 0
+    nc = l // q
+
+    xs = xs.reshape(bsz, nc, q, g, hg, p)
+    dt = dt.reshape(bsz, nc, q, g, hg)
+    b_ = b_.reshape(bsz, nc, q, g, n)
+    c_ = c_.reshape(bsz, nc, q, g, n)
+    a_h = a.reshape(g, hg)
+
+    da = dt * a_h[None, None, None]                    # (B,nc,Q,G,Hg)
+    cs = jnp.cumsum(da, axis=2)                        # inclusive cumsum over Q
+
+    # ---- intra-chunk (attention-like, lower-triangular decay mask) ----
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", c_, b_)      # (B,nc,G,Q,Q)
+    csq1 = cs[:, :, :, None, :, :]                     # (B,nc,Q,1,G,Hg)
+    csq2 = cs[:, :, None, :, :, :]                     # (B,nc,1,Q,G,Hg)
+    decay = jnp.exp(csq1 - csq2)                       # (B,nc,Q,Q,G,Hg)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None, None], decay, 0.0)
+    dtx = dt[..., None] * xs                           # (B,nc,Q,G,Hg,P)
+    y_intra = jnp.einsum("bcgqk,bcqkgh,bckghp->bcqghp", cb, decay, dtx)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cs[:, :, -1:, :, :] - cs)   # (B,nc,Q,G,Hg)
+    states = jnp.einsum("bcqgn,bcqgh,bcqghp->bcghnp", b_, dt * decay_to_end, xs)
+
+    # ---- inter-chunk scan ----
+    t_total = jnp.exp(cs[:, :, -1])                    # (B,nc,G,Hg)
+    if h_init is None:
+        h_init = jnp.zeros((bsz, g, hg, n, p), jnp.float32)
+
+    def step(h_prev, inputs):
+        t_c, s_c = inputs
+        h_next = h_prev * t_c[..., None, None] + s_c
+        return h_next, h_prev
+
+    h_final, h_ins = lax.scan(
+        step, h_init,
+        (jnp.moveaxis(t_total, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                  # (B,nc,G,Hg,N,P)
+
+    y_inter = jnp.einsum("bcqgn,bcghnp->bcqghp", c_, h_ins) \
+        * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y, h_final
+
+
+def mamba_block(p, x, cfg, wsc=None, h_init=None, return_state=False):
+    """Full Mamba-2 mixer. x (B,L,D) -> (B,L,D)."""
+    wsc = wsc or (lambda a, _: a)
+    s = cfg.ssm
+    d_inner, h, conv_dim, _ = ssm_dims(cfg)
+    bsz, l, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    conv_tail = xbc[:, -(s.d_conv - 1):]          # pre-conv inputs → decode cache
+    xbc = causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b_, c_ = _split_xbc(xbc, cfg)
+
+    xs = wsc(xs.reshape(bsz, l, h, s.headdim), "blhp").astype(jnp.float32)
+    b_ = b_.reshape(bsz, l, s.n_groups, s.d_state).astype(jnp.float32)
+    c_ = c_.reshape(bsz, l, s.n_groups, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h_final = ssd_scan(xs, dt, a, b_, c_, s.chunk, h_init=h_init)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs
+    y = y.astype(x.dtype).reshape(bsz, l, d_inner)
+    y = _gated_norm(y, z, p["gate_norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (h_final, conv_tail)
+    return out
+
+
+def mamba_decode_step(p, x, cfg, ssm_state, conv_cache):
+    """One-token recurrence. x (B,1,D); ssm_state (B,G,Hg,N,P);
+    conv_cache (B, d_conv-1, conv_dim). Returns (out, new_state, new_conv)."""
+    s = cfg.ssm
+    d_inner, h, conv_dim, _ = ssm_dims(cfg)
+    g, hg = s.n_groups, h // s.n_groups
+    bsz = x.shape[0]
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    window = jnp.concatenate([conv_cache, xbc], axis=1)      # (B, d_conv, C)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(window.dtype))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(conv.dtype))[:, None, :]
+    new_conv = window[:, 1:]
+
+    xs, b_, c_ = _split_xbc(conv, cfg)
+    xs = xs.reshape(bsz, g, hg, s.headdim).astype(jnp.float32)
+    b_ = b_.reshape(bsz, g, s.d_state).astype(jnp.float32)
+    c_ = c_.reshape(bsz, g, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    dt = dt.reshape(bsz, g, hg)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)).reshape(g, hg)
+
+    decay = jnp.exp(dt * a[None])                             # (B,G,Hg)
+    upd = jnp.einsum("bgn,bghp->bghnp", b_, dt[..., None] * xs)
+    new_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bgn,bghnp->bghp", c_, new_state)
+    y = y + p["D"].astype(jnp.float32).reshape(g, hg)[None, ..., None] * xs
+    y = y.astype(x.dtype).reshape(bsz, 1, d_inner)
+    y = _gated_norm(y, z, p["gate_norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state, new_conv

@@ -1,0 +1,121 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Prefill expands the latent to full K/V and reuses the blockwise attention.
+Decode uses the *absorbed* formulation: queries are projected into the
+kv-latent space (absorbing W_uk) so scores are taken directly against the
+cached latent — the cache is (c_kv, k_rope) of size kv_rank + rope_dim per
+position instead of 2·H·hd, which is MLA's entire point for long-context
+serving.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention, merge_heads
+from repro.models.rope import apply_rope
+
+
+def mla_params(ctx, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "wdq": ctx.p("wdq", (d, m.q_lora_rank), "embed,lora"),
+        "q_norm_scale": ctx.p("q_norm_scale", (m.q_lora_rank,), "norm", init="ones"),
+        "wuq": ctx.p("wuq", (m.q_lora_rank, h * qk), "lora,attn_out"),
+        "wdkv": ctx.p("wdkv", (d, m.kv_lora_rank + m.qk_rope_head_dim), "embed,lora"),
+        "kv_norm_scale": ctx.p("kv_norm_scale", (m.kv_lora_rank,), "norm", init="ones"),
+        "wuk": ctx.p("wuk", (m.kv_lora_rank, h * m.qk_nope_head_dim), "lora,attn_out"),
+        "wuv": ctx.p("wuv", (m.kv_lora_rank, h * m.v_head_dim), "lora,attn_out"),
+        "wo": ctx.p("wo", (h * m.v_head_dim, d), "attn_out,embed",
+                    scale=(h * m.v_head_dim) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    return p
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(p, x, cfg):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = _rms(x @ p["wdq"], p["q_norm_scale"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, qk)
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _project_latent(p, x, cfg):
+    m = cfg.mla
+    lat = x @ p["wdkv"]
+    c_kv = _rms(lat[..., :m.kv_lora_rank], p["kv_norm_scale"], cfg.norm_eps)
+    k_rope = lat[..., m.kv_lora_rank:]
+    return c_kv, k_rope
+
+
+def mla_prefill(p, x, cfg, positions, *, block_q=512, block_kv=512,
+                schedule="masked"):
+    """Full-expansion MLA attention over a sequence. x (B,S,D)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _project_latent(p, x, cfg)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)                    # (B,S,H,qk)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, h, m.qk_rope_head_dim))], -1)
+    out = blockwise_attention(q, k, v, causal=True, block_q=block_q,
+                              block_kv=block_kv, schedule=schedule,
+                              remat_tiles=cfg.attn_remat_tiles)
+    return merge_heads(out) @ p["wo"], (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg, cache, position):
+    """Absorbed-matmul decode. x (B,1,D); cache = {'c_kv','k_rope','len'}.
+
+    scores_h(s) = q_nopeᵀ W_ukᵀ c_kv(s) + q_ropeᵀ k_rope(s)
+    out_h       = W_uvᵀ (Σ_s p(s) · c_kv(s))
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(p, x, cfg)            # (B,1,H,·)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]     # (B,S,r), (B,S,rope)
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))        # (B,1,H,r)
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bqhn,bsn->bhqs", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(c_kv.shape[1]) <= position
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, -1)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, wuv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * m.v_head_dim)
+    return out @ p["wo"]
+
+
+def mla_new_cache_entry(p, x, cfg, position):
+    """Latent cache line for the token(s) just processed. x (B,1,D)."""
+    c_kv, k_rope = _project_latent(p, x, cfg)
+    pos = jnp.full((x.shape[0], x.shape[1]), position, jnp.int32)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope

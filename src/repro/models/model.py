@@ -1,0 +1,712 @@
+"""Model assembly for all 10 assigned architectures.
+
+One parameter/construction path (``build_params`` running in init/shape/axes
+modes — see layers.Ctx), one forward with ``lax.scan`` over stacked layer
+params (bounded HLO at 512 devices), one cached ``decode_step``. Families:
+
+  dense       qwen2.5-14b / yi-34b / qwen1.5-110b        (GQA [+bias] [+SWA])
+  mla         minicpm3-4b                                 (latent KV)
+  moe         qwen3-moe-30b-a3b / mixtral-8x7b            (sort-based dispatch)
+  ssm         mamba2-130m                                 (SSD)
+  hybrid      zamba2-7b            (Mamba2 + weight-shared attention block)
+  audio       whisper-tiny         (enc-dec; conv frontend stubbed to frames)
+  vlm         qwen2-vl-72b         (M-RoPE; patch embeddings stubbed)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mamba2, mla, moe
+from repro.models.layers import (Ctx, apply_mlp, apply_norm, mlp_params,
+                                 norm_params, sinusoidal_positions, stacked)
+from repro.models.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _dense_layer(ctx, cfg):
+    p = {}
+    p.update(norm_params(ctx, "attn_norm", cfg.d_model, cfg.norm_type))
+    if cfg.mla is not None:
+        p.update(mla.mla_params(ctx, cfg))
+    else:
+        p.update(attn.attn_params(ctx, cfg))
+    p.update(norm_params(ctx, "mlp_norm", cfg.d_model, cfg.norm_type))
+    if cfg.moe is not None:
+        p.update(moe.moe_params(ctx, cfg))
+    else:
+        p.update(mlp_params(ctx, cfg.d_model, cfg.d_ff, cfg.act))
+    return p
+
+
+def _enc_layer(ctx, cfg):
+    p = {}
+    p.update(norm_params(ctx, "attn_norm", cfg.d_model, cfg.norm_type))
+    p.update(attn.attn_params(ctx, cfg))
+    p.update(norm_params(ctx, "mlp_norm", cfg.d_model, cfg.norm_type))
+    p.update(mlp_params(ctx, cfg.d_model, cfg.d_ff, cfg.act))
+    return p
+
+
+def _dec_layer(ctx, cfg):
+    p = _enc_layer(ctx, cfg)
+    p.update(norm_params(ctx, "cross_norm", cfg.d_model, cfg.norm_type))
+    cross = attn.attn_params(ctx.sub("cross"), cfg)
+    p.update({f"cross_{k}": v for k, v in cross.items()})
+    return p
+
+
+def _mamba_layer(ctx, cfg):
+    p = {}
+    p.update(norm_params(ctx, "ssm_norm", cfg.d_model, cfg.norm_type))
+    p.update(mamba2.mamba_params(ctx, cfg))
+    return p
+
+
+def build_params(cfg, mode: str = "init", key: Optional[jax.Array] = None):
+    ctx = Ctx(mode=mode, key=key, dtype=_dt(cfg))
+    # vocab-parallel rows by default; 'embed_rows_local' keeps rows
+    # replicated and TP-shards the columns instead, making the token gather
+    # communication-free (§Perf: kills the gather reshard all-gathers).
+    embed_axes = "vocab_rows,embed_tp" if cfg.embed_rows_local \
+        else "vocab,embed"
+    p: dict[str, Any] = {
+        "embed": ctx.p("embed", (cfg.vocab, cfg.d_model), embed_axes,
+                       scale=1.0),
+    }
+    if cfg.family == "audio":
+        e = cfg.enc_dec
+        p["enc_layers"] = stacked(ctx.sub("enc"), e.n_enc_layers,
+                                  lambda c: _enc_layer(c, cfg))
+        p.update(norm_params(ctx, "enc_final_norm", cfg.d_model, cfg.norm_type))
+        p["dec_layers"] = stacked(ctx.sub("dec"), cfg.n_layers,
+                                  lambda c: _dec_layer(c, cfg))
+    elif cfg.family == "ssm":
+        p["layers"] = stacked(ctx.sub("layers"), cfg.n_layers,
+                              lambda c: _mamba_layer(c, cfg))
+    elif cfg.family == "hybrid":
+        p["layers"] = stacked(ctx.sub("layers"), cfg.n_layers,
+                              lambda c: _mamba_layer(c, cfg))
+        sa = ctx.sub("shared_attn")
+        shared = {}
+        shared.update(norm_params(sa, "attn_norm", cfg.d_model, cfg.norm_type))
+        shared.update(attn.attn_params(sa, cfg))
+        shared.update(norm_params(sa, "mlp_norm", cfg.d_model, cfg.norm_type))
+        shared.update(mlp_params(sa, cfg.d_model, cfg.d_ff, cfg.act))
+        p["shared_attn"] = shared
+    else:  # dense / moe / vlm
+        p["layers"] = stacked(ctx.sub("layers"), cfg.n_layers,
+                              lambda c: _dense_layer(c, cfg))
+    p.update(norm_params(ctx, "final_norm", cfg.d_model, cfg.norm_type))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ctx.p("lm_head", (cfg.d_model, cfg.vocab), "embed,vocab")
+    return p
+
+
+def init_params(cfg, key):
+    return build_params(cfg, "init", key)
+
+
+def param_shapes(cfg):
+    return build_params(cfg, "shape")
+
+
+def param_axes(cfg):
+    return build_params(cfg, "axes")
+
+
+def param_count(cfg, active_only: bool = False, include_embed: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = jax.tree_util.keystr(path)
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        if not include_embed and ("embed'" in name or "lm_head" in name):
+            continue
+        if active_only and cfg.moe is not None and (
+                "w_gate" in name or "w_up" in name or "w_down" in name) \
+                and "experts" not in name and leaf.shape[1:2] == (cfg.moe.n_experts,):
+            pass  # handled below via shape check
+        if active_only and cfg.moe is not None and len(leaf.shape) >= 2 \
+                and leaf.shape[-3:-2] == (cfg.moe.n_experts,):
+            size = size * cfg.moe.top_k // cfg.moe.n_experts
+        total += size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _rope_q(q, positions, cfg):
+    """q (B,S,H,hd) flat heads."""
+    if cfg.vlm is not None:
+        return apply_mrope(q, positions, cfg.rope_theta, cfg.vlm.mrope_sections)
+    return apply_rope(q, positions, cfg.rope_theta)
+
+
+_rope_k = _rope_q
+
+
+def _self_attention(pl, h, cfg, positions, wsc, *, causal=True, prefix="",
+                    schedule="masked", return_kv=False):
+    g = {k[len(prefix):]: v for k, v in pl.items() if k.startswith(prefix)} \
+        if prefix else pl
+    q, k, v = attn.project_qkv(g, h, cfg)
+    if cfg.enc_dec is None:  # whisper uses absolute positions, no rope
+        q = _rope_q(q, positions, cfg)
+        k = _rope_k(k, positions, cfg)
+    q, k, v = wsc(q, "bshd"), wsc(k, "bskvh"), wsc(v, "bskvh")
+    out = attn.blockwise_attention(q, k, v, causal=causal,
+                                   window=cfg.swa_window, schedule=schedule,
+                                   remat_tiles=cfg.attn_remat_tiles)
+    out = attn.mask_pad_heads(out, cfg)
+    out = attn.merge_heads(wsc(out, "bshd")) @ g["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _cross_attention(pl, h, enc_out, cfg, wsc):
+    g = {k[len("cross_"):]: v for k, v in pl.items() if k.startswith("cross_")}
+    q, k, v = attn.project_qkv(g, h, cfg, x_kv=enc_out)
+    out = attn.blockwise_attention(q, k, v, causal=False)
+    return attn.merge_heads(out) @ g["wo"]
+
+
+def _dense_block(pl, x, cfg, positions, wsc, schedule="masked", collect=False):
+    h = apply_norm(pl, "attn_norm", x, cfg.norm_type, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, (c_kv, k_rope) = mla.mla_prefill(pl, h, cfg, positions,
+                                            schedule=schedule)
+        kv = {"c_kv": c_kv.astype(_cdt(cfg)), "k_rope": k_rope.astype(_cdt(cfg))} \
+            if collect else {}
+    else:
+        a, (k, v) = _self_attention(pl, h, cfg, positions, wsc,
+                                    schedule=schedule, return_kv=True)
+        kv = {"k": k.astype(_cdt(cfg)), "v": v.astype(_cdt(cfg))} \
+            if collect else {}
+    x = x + a
+    h = apply_norm(pl, "mlp_norm", x, cfg.norm_type, cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe.moe_layer(pl, h, cfg, wsc)
+    else:
+        y, aux = apply_mlp(pl, h, cfg.act, wsc), {}
+    aux = dict(aux)
+    aux.update(kv)
+    return x + y, aux
+
+
+def _mamba_res_block(pl, x, cfg, wsc):
+    h = apply_norm(pl, "ssm_norm", x, cfg.norm_type, cfg.norm_eps)
+    return x + mamba2.mamba_block(pl, h, cfg, wsc)
+
+
+def _shared_attn_block(ps, x, cfg, positions, wsc):
+    h = apply_norm(ps, "attn_norm", x, cfg.norm_type, cfg.norm_eps)
+    x = x + _self_attention(ps, h, cfg, positions, wsc)
+    h = apply_norm(ps, "mlp_norm", x, cfg.norm_type, cfg.norm_eps)
+    return x + apply_mlp(ps, h, cfg.act, wsc)
+
+
+def _remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+def _scan_layers(body, x, xs, cfg):
+    """scan-over-layers with the configured remat policy.
+
+    ``remat='nested:<G>'`` runs a scan-of-scans: the outer scan saves only
+    every G-th layer input, the inner (rematerialized) scan recomputes the
+    group during the backward — activation memory drops from L·act to
+    (L/G + G)·act (√L at the optimum). §Perf iteration for the train cells.
+    """
+    if cfg.remat.startswith("nested"):
+        g = int(cfg.remat.split(":")[1]) if ":" in cfg.remat else 8
+        l = cfg.n_layers
+        g = max(d for d in range(1, min(g, l) + 1) if l % d == 0)
+
+        def group_body(carry, group_xs):
+            return lax.scan(jax.checkpoint(body), carry, group_xs)
+
+        grouped = jax.tree.map(
+            lambda a: a.reshape((l // g, g) + a.shape[1:]), xs)
+        x, ys = lax.scan(jax.checkpoint(group_body), x, grouped)
+        ys = jax.tree.map(lambda a: a.reshape((l,) + a.shape[2:]), ys)
+        return x, ys
+    return lax.scan(_remat(body, cfg), x, xs)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg, wsc=None, schedule="masked", collect=False):
+    """batch: {'tokens' (B,S) [, 'positions', 'vision_embeds', 'frames']}.
+
+    Returns (logits_f32 (B,S,V), aux dict). With ``collect=True`` (the
+    serving *prefill* path) aux["cache"] holds the per-layer KV/state cache
+    in exactly the layout of :func:`cache_shapes` (max_len = S).
+    """
+    wsc = wsc or (lambda a, _: a)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.vlm is not None:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_cdt(cfg))
+    x = wsc(x, "bsd")
+
+    if cfg.vlm is not None and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = lax.dynamic_update_slice(x, ve, (0, 0, 0))
+
+    aux: dict = {}
+    cache: dict = {}
+    if cfg.family == "audio":
+        x_dec, enc_out = _whisper_encode_embed(params, batch, cfg, wsc, x)
+        x = x_dec
+
+        def dec_body(carry, pl):
+            h = carry
+            hn = apply_norm(pl, "attn_norm", h, cfg.norm_type, cfg.norm_eps)
+            if collect:
+                a, (k, v) = _self_attention(pl, hn, cfg, positions, wsc,
+                                            return_kv=True)
+                g = {kk[len("cross_"):]: vv for kk, vv in pl.items()
+                     if kk.startswith("cross_")}
+                _, ck, cv = attn.project_qkv(g, hn, cfg, x_kv=enc_out)
+                kv = {"k": k.astype(_cdt(cfg)), "v": v.astype(_cdt(cfg)),
+                      "ck": ck.astype(_cdt(cfg)), "cv": cv.astype(_cdt(cfg))}
+            else:
+                a = _self_attention(pl, hn, cfg, positions, wsc)
+                kv = {}
+            h = h + a
+            hn = apply_norm(pl, "cross_norm", h, cfg.norm_type, cfg.norm_eps)
+            h = h + _cross_attention(pl, hn, enc_out, cfg, wsc)
+            hn = apply_norm(pl, "mlp_norm", h, cfg.norm_type, cfg.norm_eps)
+            h = h + apply_mlp(pl, hn, cfg.act, wsc)
+            return wsc(h, "bsd"), kv
+
+        x, kvs = lax.scan(_remat(dec_body, cfg), x, params["dec_layers"])
+        if collect:
+            cache = dict(kvs)
+    elif cfg.family == "ssm":
+        def body(carry, pl):
+            h = carry
+            hn = apply_norm(pl, "ssm_norm", h, cfg.norm_type, cfg.norm_eps)
+            if collect:
+                y, (st, tail) = mamba2.mamba_block(pl, hn, cfg, wsc,
+                                                   return_state=True)
+                out = {"ssm_state": st, "conv": tail.astype(_cdt(cfg))}
+            else:
+                y, out = mamba2.mamba_block(pl, hn, cfg, wsc), {}
+            return wsc(h + y, "bsd"), out
+
+        x, outs = _scan_layers(body, x, params["layers"], cfg)
+        if collect:
+            cache = dict(outs)
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        shared = params["shared_attn"]
+        n_apps = cfg.n_layers // every
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        if collect:
+            sk0 = jnp.zeros((n_apps, b, s, kvh, hd), _cdt(cfg))
+            sv0 = jnp.zeros((n_apps, b, s, kvh, hd), _cdt(cfg))
+
+        def body(carry, idx_pl):
+            i, pl = idx_pl
+            if collect:
+                h, sk, sv = carry
+            else:
+                h = carry
+            hn = apply_norm(pl, "ssm_norm", h, cfg.norm_type, cfg.norm_eps)
+            if collect:
+                y, (st, tail) = mamba2.mamba_block(pl, hn, cfg, wsc,
+                                                   return_state=True)
+                out = {"ssm_state": st, "conv": tail.astype(_cdt(cfg))}
+            else:
+                y, out = mamba2.mamba_block(pl, hn, cfg, wsc), {}
+            h = h + y
+            app = (i + 1) // every - 1
+
+            def with_attn(args):
+                if collect:
+                    h, sk, sv = args
+                else:
+                    h, = args
+                hn = apply_norm(shared, "attn_norm", h, cfg.norm_type,
+                                cfg.norm_eps)
+                if collect:
+                    a, (k, v) = _self_attention(shared, hn, cfg, positions,
+                                                wsc, return_kv=True)
+                    sk = lax.dynamic_update_index_in_dim(
+                        sk, k.astype(sk.dtype), app, 0)
+                    sv = lax.dynamic_update_index_in_dim(
+                        sv, v.astype(sv.dtype), app, 0)
+                else:
+                    a = _self_attention(shared, hn, cfg, positions, wsc)
+                h = h + a
+                hn = apply_norm(shared, "mlp_norm", h, cfg.norm_type,
+                                cfg.norm_eps)
+                h = h + apply_mlp(shared, hn, cfg.act, wsc)
+                return (h, sk, sv) if collect else (h,)
+
+            if collect:
+                h, sk, sv = lax.cond((i + 1) % every == 0, with_attn,
+                                     lambda a: a, (h, sk, sv))
+                return (wsc(h, "bsd"), sk, sv), out
+            h, = lax.cond((i + 1) % every == 0, with_attn, lambda a: a, (h,))
+            return wsc(h, "bsd"), out
+
+        init = (x, sk0, sv0) if collect else x
+        carry, outs = lax.scan(_remat(body, cfg), init,
+                               (jnp.arange(cfg.n_layers), params["layers"]))
+        if collect:
+            x, sk, sv = carry
+            cache = dict(outs)
+            cache["shared_k"] = sk
+            cache["shared_v"] = sv
+        else:
+            x = carry
+    else:
+        def body(carry, pl):
+            h, aux_l = _dense_block(pl, carry, cfg, positions, wsc,
+                                    schedule=schedule, collect=collect)
+            return wsc(h, "bsd"), aux_l
+
+        x, auxs = _scan_layers(body, x, params["layers"], cfg)
+        if cfg.moe is not None:
+            aux["expert_counts"] = jnp.sum(auxs.pop("expert_counts"), axis=0)
+            aux["aux_loss"] = jnp.sum(auxs.pop("aux_loss"))
+        if collect:
+            cache = {k: v for k, v in auxs.items()
+                     if k in ("k", "v", "c_kv", "k_rope")}
+
+    x = apply_norm(params, "final_norm", x, cfg.norm_type, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = wsc((x @ head.astype(x.dtype)).astype(jnp.float32), "bsv")
+    if collect:
+        aux["cache"] = cache
+    return logits, aux
+
+
+def _whisper_encode_embed(params, batch, cfg, wsc, x_dec_embed):
+    """Run the (stubbed-frontend) encoder; add sinusoidal positions."""
+    e = cfg.enc_dec
+    frames = batch["frames"].astype(_cdt(cfg))          # (B, F, D) stub embeds
+    pos = sinusoidal_positions(e.n_frames, cfg.d_model, frames.dtype)
+    h = frames + pos[None]
+
+    def enc_body(carry, pl):
+        v = carry
+        hn = apply_norm(pl, "attn_norm", v, cfg.norm_type, cfg.norm_eps)
+        v = v + _self_attention(pl, hn, cfg, None, wsc, causal=False)
+        hn = apply_norm(pl, "mlp_norm", v, cfg.norm_type, cfg.norm_eps)
+        v = v + apply_mlp(pl, hn, cfg.act, wsc)
+        return wsc(v, "bsd"), {}
+
+    h, _ = lax.scan(_remat(enc_body, cfg), h, params["enc_layers"])
+    enc_out = apply_norm(params, "enc_final_norm", h, cfg.norm_type, cfg.norm_eps)
+
+    s = x_dec_embed.shape[1]
+    dpos = sinusoidal_positions(s, cfg.d_model, x_dec_embed.dtype)
+    return x_dec_embed + dpos[None], enc_out
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token-mean CE; vocab may be model-sharded (lse → partial + allreduce)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = labels[..., None] == jnp.arange(v)[None, None, :]
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    ce = lse - label_logit
+    loss = jnp.mean(ce)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss
+
+
+def loss_fn(params, batch, cfg, wsc=None, schedule="masked"):
+    logits, aux = forward(params, batch, cfg, wsc, schedule=schedule)
+    loss = cross_entropy(logits, batch["labels"], cfg.z_loss)
+    if "aux_loss" in aux:
+        loss = loss + aux["aux_loss"]
+    aux["ce_loss"] = loss
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg, batch_size: int, max_len: int):
+    """ShapeDtypeStruct tree for the decode cache (dry-run friendly)."""
+    cdt = _cdt(cfg)
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    sd = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": sd((l, batch_size, max_len, m.kv_lora_rank), cdt),
+                    "k_rope": sd((l, batch_size, max_len, m.qk_rope_head_dim), cdt)}
+        return {"k": sd((l, batch_size, max_len, kv, hd), cdt),
+                "v": sd((l, batch_size, max_len, kv, hd), cdt)}
+    if cfg.family == "ssm":
+        return _ssm_cache_shapes(cfg, batch_size)
+    if cfg.family == "hybrid":
+        shapes = _ssm_cache_shapes(cfg, batch_size)
+        n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        shapes["shared_k"] = sd((n_apps, batch_size, max_len, kv, hd), cdt)
+        shapes["shared_v"] = sd((n_apps, batch_size, max_len, kv, hd), cdt)
+        return shapes
+    if cfg.family == "audio":
+        e = cfg.enc_dec
+        return {"k": sd((l, batch_size, max_len, kv, hd), cdt),
+                "v": sd((l, batch_size, max_len, kv, hd), cdt),
+                "ck": sd((l, batch_size, e.n_frames, kv, hd), cdt),
+                "cv": sd((l, batch_size, e.n_frames, kv, hd), cdt)}
+    raise ValueError(cfg.family)
+
+
+def _ssm_cache_shapes(cfg, batch_size):
+    s = cfg.ssm
+    d_inner, h, conv_dim, _ = mamba2.ssm_dims(cfg)
+    g, hg = s.n_groups, h // s.n_groups
+    sd = jax.ShapeDtypeStruct
+    return {"ssm_state": sd((cfg.n_layers, batch_size, g, hg, s.d_state,
+                             s.headdim), jnp.float32),
+            "conv": sd((cfg.n_layers, batch_size, s.d_conv - 1, conv_dim),
+                       _cdt(cfg))}
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch_size, max_len))
+
+
+def _decode_self_attention_ro(pl, h, cfg, k_cache, v_cache, position, wsc):
+    """Read-only-cache decode attention: returns (out, k_new, v_new).
+
+    The new token's kv never enters the cache here — the caller writes all
+    layers' slices in ONE dynamic_update_slice outside the layer scan
+    (O(L) instead of O(L·S) cache bytes per token; §Perf decode iteration).
+    """
+    b = h.shape[0]
+    q, k_new, v_new = attn.project_qkv(pl, h, cfg)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    if cfg.enc_dec is None:
+        if cfg.vlm is not None:
+            pos = jnp.broadcast_to(pos[None], (3, b, 1))
+        q = _rope_q(q, pos, cfg)
+        k_new = _rope_k(k_new, pos, cfg)
+    out = attn.decode_attention_plus_one(
+        q, wsc(k_cache, "bskh"), wsc(v_cache, "bskh"), k_new, v_new,
+        position, window=cfg.swa_window)
+    out = attn.mask_pad_heads(out, cfg)
+    return attn.merge_heads(out) @ pl["wo"], k_new, v_new
+
+
+def _decode_self_attention(pl, h, cfg, k_cache, v_cache, position, wsc,
+                           prefix=""):
+    g = {k[len(prefix):]: v for k, v in pl.items() if k.startswith(prefix)} \
+        if prefix else pl
+    b = h.shape[0]
+    q, k_new, v_new = attn.project_qkv(g, h, cfg)
+    pos = jnp.full((b, 1), position, jnp.int32)
+    if cfg.enc_dec is None:
+        if cfg.vlm is not None:
+            pos = jnp.broadcast_to(pos[None], (3, b, 1))
+        q = _rope_q(q, pos, cfg)
+        k_new = _rope_k(k_new, pos, cfg)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype),
+                                              position, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype),
+                                              position, axis=1)
+    out = attn.decode_attention(q, wsc(k_cache, "bskh"), wsc(v_cache, "bskh"),
+                                position + 1, window=cfg.swa_window)
+    out = attn.mask_pad_heads(out, cfg)
+    return attn.merge_heads(out) @ g["wo"], k_cache, v_cache
+
+
+def decode_step(params, cache, tokens, position, cfg, wsc=None,
+                batch_extras=None):
+    """One greedy decode step. tokens (B,1) -> (logits (B,1,V), new cache).
+
+    ``position`` is the index the new token occupies; its KV/state is written
+    into the cache, and attention spans positions [0, position].
+    """
+    wsc = wsc or (lambda a, _: a)
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_cdt(cfg))
+    aux: dict = {}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.mla is not None:
+            def body(carry, pls):
+                h = carry
+                pl, ck, kr = pls
+                hn = apply_norm(pl, "attn_norm", h, cfg.norm_type, cfg.norm_eps)
+                ckv_new, krope_new = mla.mla_new_cache_entry(pl, hn, cfg, position)
+                ck = lax.dynamic_update_slice_in_dim(
+                    ck, ckv_new.astype(ck.dtype), position, axis=1)
+                kr = lax.dynamic_update_slice_in_dim(
+                    kr, krope_new.astype(kr.dtype), position, axis=1)
+                h = h + mla.mla_decode(pl, hn, cfg, {"c_kv": ck, "k_rope": kr},
+                                       position)
+                hn = apply_norm(pl, "mlp_norm", h, cfg.norm_type, cfg.norm_eps)
+                h = h + apply_mlp(pl, hn, cfg.act, wsc)
+                return h, (ck, kr)
+
+            x, (ck, kr) = lax.scan(body, x, (params["layers"],
+                                             cache["c_kv"], cache["k_rope"]))
+            new_cache = {"c_kv": ck, "k_rope": kr}
+        else:
+            def body(carry, pls):
+                h = carry
+                pl, kc, vc = pls       # kc/vc read-only in the scan
+                hn = apply_norm(pl, "attn_norm", h, cfg.norm_type, cfg.norm_eps)
+                a, k_new, v_new = _decode_self_attention_ro(
+                    pl, hn, cfg, kc, vc, position, wsc)
+                h = h + a
+                hn = apply_norm(pl, "mlp_norm", h, cfg.norm_type, cfg.norm_eps)
+                if cfg.moe is not None:
+                    y, aux_l = moe.moe_layer(pl, hn, cfg, wsc)
+                else:
+                    y, aux_l = apply_mlp(pl, hn, cfg.act, wsc), {}
+                return h + y, (k_new, v_new, aux_l)
+
+            x, (k_news, v_news, auxs) = lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            # single slice write for all layers (O(L) bytes, not O(L·S))
+            new_cache = {
+                "k": lax.dynamic_update_slice(
+                    cache["k"], k_news.astype(cache["k"].dtype),
+                    (0, 0, position, 0, 0)),
+                "v": lax.dynamic_update_slice(
+                    cache["v"], v_news.astype(cache["v"].dtype),
+                    (0, 0, position, 0, 0)),
+            }
+            if cfg.moe is not None:
+                aux["expert_counts"] = jnp.sum(auxs["expert_counts"], axis=0)
+    elif cfg.family == "ssm":
+        def body(carry, pls):
+            h = carry
+            pl, st, cv = pls
+            hn = apply_norm(pl, "ssm_norm", h, cfg.norm_type, cfg.norm_eps)
+            y, st, cv = mamba2.mamba_decode_step(pl, hn, cfg, st, cv)
+            return h + y, (st, cv)
+
+        x, (st, cv) = lax.scan(body, x, (params["layers"],
+                                         cache["ssm_state"], cache["conv"]))
+        new_cache = {"ssm_state": st, "conv": cv}
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        shared = params["shared_attn"]
+        sk_ro, sv_ro = cache["shared_k"], cache["shared_v"]  # read-only
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+
+        def body(carry, pls):
+            h = carry
+            i, pl, st, cv = pls
+            hn = apply_norm(pl, "ssm_norm", h, cfg.norm_type, cfg.norm_eps)
+            y, st, cv = mamba2.mamba_decode_step(pl, hn, cfg, st, cv)
+            h = h + y
+            app = jnp.clip((i + 1) // every - 1, 0, sk_ro.shape[0] - 1)
+
+            def with_attn(h):
+                hn = apply_norm(shared, "attn_norm", h, cfg.norm_type,
+                                cfg.norm_eps)
+                kc = lax.dynamic_index_in_dim(sk_ro, app, 0, keepdims=False)
+                vc = lax.dynamic_index_in_dim(sv_ro, app, 0, keepdims=False)
+                a, k_new, v_new = _decode_self_attention_ro(
+                    shared, hn, cfg, kc, vc, position, wsc)
+                h = h + a
+                hn = apply_norm(shared, "mlp_norm", h, cfg.norm_type,
+                                cfg.norm_eps)
+                h = h + apply_mlp(shared, hn, cfg.act, wsc)
+                return h, k_new, v_new
+
+            zeros_kv = (jnp.zeros((b, 1, kvh, hd), _cdt(cfg)),
+                        jnp.zeros((b, 1, kvh, hd), _cdt(cfg)))
+            h, k_new, v_new = lax.cond(
+                (i + 1) % every == 0, with_attn,
+                lambda h: (h, *zeros_kv), h)
+            return h, (st, cv, k_new, v_new)
+
+        x, (st, cv, k_news, v_news) = lax.scan(
+            body, x, (jnp.arange(cfg.n_layers), params["layers"],
+                      cache["ssm_state"], cache["conv"]))
+        # the every-6th rows hold the shared-attn kv; ONE slice write
+        app_rows = jax.tree.map(
+            lambda a: a[every - 1::every], (k_news, v_news))
+        new_cache = {
+            "ssm_state": st, "conv": cv,
+            "shared_k": lax.dynamic_update_slice(
+                sk_ro, app_rows[0].astype(sk_ro.dtype), (0, 0, position, 0, 0)),
+            "shared_v": lax.dynamic_update_slice(
+                sv_ro, app_rows[1].astype(sv_ro.dtype), (0, 0, position, 0, 0)),
+        }
+    elif cfg.family == "audio":
+        s_max = cache["k"].shape[2]
+        dpos = sinusoidal_positions(s_max, cfg.d_model, x.dtype)
+        x = x + lax.dynamic_slice_in_dim(dpos, position, 1, axis=0)[None]
+
+        def body(carry, pls):
+            h = carry
+            pl, kc, vc, ck, cv = pls
+            hn = apply_norm(pl, "attn_norm", h, cfg.norm_type, cfg.norm_eps)
+            a, kc, vc = _decode_self_attention(pl, hn, cfg, kc, vc, position,
+                                               wsc)
+            h = h + a
+            hn = apply_norm(pl, "cross_norm", h, cfg.norm_type, cfg.norm_eps)
+            g = {k[len("cross_"):]: v for k, v in pl.items()
+                 if k.startswith("cross_")}
+            q = (hn @ g["wq"] + (g["bq"].astype(hn.dtype) if cfg.qkv_bias
+                                 else 0.0))
+            bq = q.reshape(h.shape[0], 1, cfg.n_q_heads, cfg.hd)
+            cross = attn.decode_attention(bq, ck, cv, ck.shape[1])
+            h = h + attn.merge_heads(cross) @ g["wo"]
+            hn = apply_norm(pl, "mlp_norm", h, cfg.norm_type, cfg.norm_eps)
+            h = h + apply_mlp(pl, hn, cfg.act, wsc)
+            return h, (kc, vc)
+
+        x, (kc, vc) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"], cache["ck"], cache["cv"]))
+        new_cache = {"k": kc, "v": vc, "ck": cache["ck"], "cv": cache["cv"]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params, "final_norm", x, cfg.norm_type, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return wsc(logits, "bsv"), new_cache, aux

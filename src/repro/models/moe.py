@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer: LOCAL sort-based capacity dispatch.
+
+Dispatch is computed *per example* (GShard-style groups = batch rows) and
+vmapped over the batch: the argsort/rank/scatter machinery then never
+crosses the batch sharding, so under pjit the only inter-device traffic is
+the expert computation itself (FSDP weight gathers under the 'tp' strategy,
+or token all-to-alls under 'ep'). The first implementation sorted the
+GLOBAL (T·k) assignment list — semantically identical, but the global sort
+lowered to cross-shard collectives every layer (§Perf cell C, iteration 2:
+~9 TB/device/step of all-reduce traffic eliminated by this change).
+
+Per group of S tokens: flatten the (S, k) assignments, stable-argsort by
+expert id, compute each assignment's rank within its expert via a prefix
+count, drop beyond capacity = cf·S·k/E, scatter into an (E, C, D) buffer,
+run the expert FFNs as one batched einsum, gather/weight back.
+
+The router's expert-choice counts (E,) feed the Space Saving expert sketch
+(heavy-hitter experts — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def moe_params(ctx, cfg):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    return {
+        "router": ctx.p("router", (d, e), "embed,router"),
+        "w_gate": ctx.p("w_gate", (e, d, f), "experts,embed,expert_ff"),
+        "w_up": ctx.p("w_up", (e, d, f), "experts,embed,expert_ff"),
+        "w_down": ctx.p("w_down", (e, f, d), "experts,expert_ff,embed"),
+    }
+
+
+def _dispatch_one(xt, top_e, cap, e):
+    """Per-group dispatch. xt (S,D); top_e (S,k) int32 → buffer + gather maps.
+
+    Returns (buf (E·C+1, D) source-scattered tokens, slot (S·k,) positions in
+    sorted order, token_of (S·k,), keep (S·k,), order (S·k,)).
+    """
+    s, k = top_e.shape
+    flat_e = top_e.reshape(s * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(s * k) - starts[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)
+    token_of = order // k
+    buf = jnp.zeros((e * cap + 1, xt.shape[-1]), xt.dtype)
+    buf = buf.at[slot].set(xt[token_of])
+    return buf[:e * cap], slot, token_of, keep, order, counts
+
+
+def moe_layer(p, x, cfg, wsc=None):
+    """x (B,S,D) -> (y (B,S,D), aux); dispatch local to each batch row."""
+    wsc = wsc or (lambda a, _: a)
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = int(m.capacity_factor * s * k / e) + 1
+
+    logits = (x @ p["router"]).astype(jnp.float32)             # (B,S,E)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = lax.top_k(probs, k)                          # (B,S,k)
+    if m.router_norm_topk:
+        top_p = top_p / jnp.sum(top_p, -1, keepdims=True)
+
+    # --- load-balance auxiliary loss (Switch/GShard style, global) ---
+    me = jnp.mean(probs, axis=(0, 1))                           # (E,)
+    counts_all = jnp.zeros((e,), jnp.int32).at[top_e.reshape(-1)].add(1)
+    ce = counts_all.astype(jnp.float32) / (b * s * k)
+    aux_loss = e * jnp.sum(me * ce) * m.aux_loss_coef
+
+    # --- per-example local dispatch (vmapped over B) ---
+    buf, slot, token_of, keep, order, _ = jax.vmap(
+        lambda xe, te: _dispatch_one(xe, te, cap, e))(x, top_e)
+    buf = wsc(buf.reshape(b, e, cap, d), "becd")
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = wsc(h, "becf")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = out_buf.reshape(b, e * cap, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    # --- combine: gather every assignment's result, weight, sum over k ---
+    def _combine_one(out_e, slot_e, token_e, keep_e, order_e, wts):
+        contrib = out_e[slot_e]                                  # (S·k, D)
+        w = wts.reshape(-1)[order_e]
+        contrib = contrib * jnp.where(keep_e, w, 0.0)[:, None].astype(out_e.dtype)
+        return jnp.zeros((s, d), out_e.dtype).at[token_e].add(contrib)
+
+    y = jax.vmap(_combine_one)(out_buf, slot, token_of, keep, order,
+                               top_p.astype(x.dtype))
+    aux = {"expert_counts": counts_all, "aux_loss": aux_loss}
+    return y, aux

@@ -1,0 +1,56 @@
+"""Rotary position embeddings — interleaved formulation, plus M-RoPE.
+
+The *interleaved* layout rotates adjacent pairs (x[2i], x[2i+1]); unlike the
+half-split layout, pairs never straddle a head_dim shard boundary, so RoPE
+stays communication-free when the sharding plan puts ``head_dim`` on the
+``model`` axis (archs whose head COUNT is not divisible by the axis size —
+qwen2.5's 40, yi's 56; see DESIGN.md §5).
+
+M-RoPE (Qwen2-VL): head_dim/2 frequency slots are split into
+(temporal, height, width) sections; each section takes its rotation angle
+from the corresponding row of a (3, B, S) position tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, half: int, theta: float) -> jax.Array:
+    """(..., S) int positions -> (..., S, half) angles."""
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, hd), positions (B, S) -> rotated x (interleaved pairs)."""
+    half = x.shape[-1] // 2
+    ang = rope_angles(positions, half, theta)          # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]                  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], half, 2)
+    x0, x1 = xf[..., 0], xf[..., 1]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """x (B, S, H, hd), positions (3, B, S) — Qwen2-VL multimodal RoPE."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    ang_all = rope_angles(positions, half, theta)       # (3, B, S, half)
+    # pick the t/h/w angle stream per frequency slot
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)        # (half,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1),                    # (B, S, half, 3)
+        sec_id[None, None, :, None], axis=-1)[..., 0]    # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], half, 2)
+    x0, x1 = xf[..., 0], xf[..., 1]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,75 @@
+"""AdamW + LR schedules + global-norm clipping, from scratch (no optax).
+
+Mixed precision: forward/backward run in the model's param dtype (bf16);
+the optimizer keeps fp32 master weights and moments, sharded exactly like
+the parameters (same PartitionSpecs), i.e. a ZeRO-style sharded optimizer
+under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    master: dict      # fp32 master params
+    m: dict           # fp32 first moment
+    v: dict           # fp32 second moment
+    count: jax.Array  # int32 step
+
+
+def init(params) -> AdamWState:
+    # copy=True: master must never alias the live params (buffer donation)
+    f32 = lambda t: jax.tree.map(
+        lambda a: jnp.array(a, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return AdamWState(master=f32(params), m=zeros(params), v=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(a.astype(jnp.float32)))
+              for a in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def update(grads, state: AdamWState, param_dtype, *, lr_fn,
+           b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params (param_dtype), new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, clip_norm)
+    count = state.count + 1
+    lr = lr_fn(count)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def step_one(p, m, v):
+        upd = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p
+        return p - lr * upd
+
+    new_master = jax.tree.map(step_one, state.master, new_m, new_v)
+    new_params = jax.tree.map(lambda a: a.astype(param_dtype), new_master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(new_master, new_m, new_v, count), metrics

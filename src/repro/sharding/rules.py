@@ -1,0 +1,236 @@
+"""Divisibility-driven sharding resolver (params + activations).
+
+Parameters carry logical axis names (comma-joined strings built by
+models.layers.Ctx in ``axes`` mode). This module maps logical names to mesh
+axes with greedy conflict/divisibility resolution, producing:
+
+  * ``param_specs(cfg, axes_tree, shapes_tree)``  -> PartitionSpec tree
+  * ``ShardingPlan.wsc(x, code)`` -> with_sharding_constraint at the
+    activation points referenced from model code ('bsd', 'bshd', ...).
+
+Strategy (DESIGN.md §5):
+  pod    — pure DP (params replicated across pods; optional FSDP extension)
+  data   — FSDP for parameters ('embed' logical axis) + batch DP
+  model  — TP: vocab, d_ff, flattened head dims, experts (EP mode), SSM inner
+  decode — KV caches shard the *sequence* dim on 'model' (+ 'data' when the
+           global batch cannot occupy the data axis, e.g. long_500k B=1)
+
+Head-count dims that don't divide the axis (40/56/6 heads on 16) are sharded
+unevenly — GSPMD pads internally; the pad waste shows up in §Roofline's
+useful-FLOPs ratio rather than blocking compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical param axis -> ordered mesh-axis candidates (first fit wins).
+# 'fsdp' is substituted with the plan's fsdp axes; None entries mean
+# "replicate if nothing fits".
+PARAM_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "vocab_rows": (),            # embed_rows_local: replicated rows
+    "embed_tp": ("model",),      # embed_rows_local: TP columns
+    "embed": ("fsdp",),
+    "ff": ("model",),
+    "expert_ff": ("model",),
+    "attn_out": ("model",),
+    "kv_out": ("model",),
+    "lora": ("model",),
+    "experts": (),            # filled per moe_strategy
+    "router": (),
+    "ssm_in": ("model",),
+    "ssm_conv": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": (),
+    "convk": (),
+    "norm": (),
+    "layers": (),
+}
+
+# assignment priority: dims earlier in this list grab mesh axes first.
+PRIORITY = ["experts", "vocab", "expert_ff", "ff", "attn_out", "kv_out",
+            "lora", "ssm_in", "ssm_conv", "ssm_inner", "embed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanOptions:
+    moe_strategy: str = "tp"       # 'tp' (expert-internal TP) | 'ep'
+    fsdp_over_pod: bool = False    # extend FSDP onto the pod axis
+    seq_shard_cache: bool = True   # decode caches: shard seq dim on 'model'
+    seq_sharded_residual: bool = False  # residual stream (B,S,D): S on 'model'
+                                        # → per-layer AR becomes RS+AG (§Perf)
+    no_tp: bool = False            # small models: pure DP, batch over 'model'
+
+
+class ShardingPlan:
+    """Resolved sharding for one (arch × mesh × options)."""
+
+    def __init__(self, cfg, mesh: Optional[Mesh], opts: PlanOptions = PlanOptions()):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opts = opts
+        if mesh is not None:
+            self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        else:
+            self.axis_sizes = {}
+        self.has_pod = "pod" in self.axis_sizes
+        fsdp = ("pod", "data") if (opts.fsdp_over_pod and self.has_pod) \
+            else ("data",)
+        self.fsdp_axes = fsdp
+        self.batch_axes = ("pod", "data") if self.has_pod else ("data",)
+        rules = dict(PARAM_RULES)
+        if cfg.moe is not None and opts.moe_strategy == "ep":
+            rules["experts"] = ("model",)
+            rules["expert_ff"] = ()
+        if opts.no_tp:
+            # pure data parallelism: the model axis joins the batch axes,
+            # every 'model' rule drops to replicate (small-model regime).
+            rules = {k: tuple(c for c in v if c != "model")
+                     for k, v in rules.items()}
+            self.batch_axes = self.batch_axes + ("model",)
+        self.rules = rules
+
+    # -- parameters --------------------------------------------------------
+
+    def _axis_fits(self, axis, dim: int, used: set) -> bool:
+        if axis in used:
+            return False
+        size = int(np.prod([self.axis_sizes.get(a, 1)
+                            for a in (axis if isinstance(axis, tuple) else (axis,))]))
+        return dim % size == 0
+
+    def param_spec(self, axes_str: str, shape: tuple) -> P:
+        if not self.axis_sizes:
+            return P()
+        names = axes_str.split(",")
+        assert len(names) == len(shape), (axes_str, shape)
+        assign: dict[int, object] = {}
+        used: set = set()
+        order = sorted(range(len(names)),
+                       key=lambda i: PRIORITY.index(names[i])
+                       if names[i] in PRIORITY else len(PRIORITY))
+        for i in order:
+            cands = self.rules.get(names[i], ())
+            for cand in cands:
+                cand = self.fsdp_axes if cand == "fsdp" else cand
+                flat = cand if isinstance(cand, tuple) else (cand,)
+                if all(f not in used for f in flat) and \
+                        self._axis_fits(cand, shape[i], used):
+                    assign[i] = cand
+                    used.update(flat)
+                    break
+        return P(*[assign.get(i) for i in range(len(names))])
+
+    def param_specs(self, axes_tree, shapes_tree):
+        return jax.tree.map(
+            lambda a, s: NamedSharding(self.mesh, self.param_spec(a, s.shape)),
+            axes_tree, shapes_tree)
+
+    # -- activations -------------------------------------------------------
+
+    def _batch(self, b: int):
+        """Largest prefix of batch axes whose product divides b."""
+        axes = []
+        prod = 1
+        for a in self.batch_axes:
+            size = self.axis_sizes.get(a, 1)
+            if b % (prod * size) == 0:
+                axes.append(a)
+                prod *= size
+        return tuple(axes) if axes else None
+
+    def act_spec(self, code: str, shape: tuple) -> P:
+        m = self.axis_sizes.get("model", 1)
+        bt = self._batch(shape[0])
+        ep = self.cfg.moe is not None and self.opts.moe_strategy == "ep"
+        if code == "bsd":        # (B,S,D) residual stream
+            if self.opts.seq_sharded_residual and not self.opts.no_tp \
+                    and shape[1] % max(m, 1) == 0:
+                return P(bt, "model", None)      # sequence-parallel sections
+            return P(bt, None, None)
+        if code == "bsv":        # (B,S,V) logits — vocab TP
+            if self.opts.no_tp:
+                return P(bt, None, None)
+            return P(bt, None, "model")
+        if code == "bshd":       # (B,S,H,hd) flat-head q/out — heads TP (maybe uneven)
+            if self.opts.no_tp:
+                return P(bt, None, None, None)
+            return P(bt, None, "model", None)
+        if code == "bskvh":      # (B,S,KV,hd) prefill k/v — replicated over model
+            return P(bt, None, None, None)
+        if code == "btf":        # (B,S,F) mlp hidden — ff TP
+            return P(bt, None, None if self.opts.no_tp else "model")
+        if code == "becd":       # (B,E,C,D) moe dispatch buffer
+            edim = "model" if ep and not self.opts.no_tp \
+                and self.cfg.moe.n_experts % m == 0 else None
+            return P(bt, edim, None, None)
+        if code == "becf":       # (B,E,C,F) moe expert hidden
+            if self.opts.no_tp:
+                return P(bt, None, None, None)
+            if ep and self.cfg.moe.n_experts % m == 0:
+                return P(bt, "model", None, None)
+            return P(bt, None, None, "model")
+        if code == "blhp":       # (B,L,H,P) ssm head-split activations
+            return self._ssm_spec(shape, bt)
+        if code == "bskh":       # (B,S,KV,hd) decode KV cache — sequence-parallel
+            return P(bt, self._cache_seq_axes(shape), None, None)
+        raise KeyError(code)
+
+    def _cache_seq_axes(self, shape, seq_dim: int | None = None):
+        if not self.opts.seq_shard_cache:
+            return None
+        b = shape[0]
+        used = self._batch(b) or ()
+        axes = [a for a in ("data", "model")
+                if a not in used and a in self.axis_sizes]
+        if "model" in axes and b >= self.axis_sizes.get("data", 1) \
+                and "data" in axes:
+            axes.remove("data")   # plenty of batch: seq on model only
+        if seq_dim is not None:
+            # keep the longest suffix-compatible prefix that divides seq_dim
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= self.axis_sizes.get(a, 1)
+                if seq_dim % prod == 0:
+                    break
+                axes.pop(0)
+        if not axes:
+            return None
+        return tuple(axes)
+
+    def _ssm_spec(self, shape, bt):
+        m = self.axis_sizes.get("model", 1)
+        if self.opts.no_tp:
+            return P(bt, None, None, None)
+        h, p_dim = shape[2], shape[3]
+        if h % m == 0:
+            return P(bt, None, "model", None)
+        if p_dim % m == 0:
+            return P(bt, None, None, "model")
+        return P(bt, None, None, None)
+
+    def wsc(self, x, code: str):
+        if self.mesh is None:
+            return x
+        spec = self.act_spec(code, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # -- inputs / steps -----------------------------------------------------
+
+    def batch_spec(self, b: int) -> P:
+        return P(self._batch(b), None)
+
+    def sketch_spec(self) -> P:
+        """Sketch state (G, k): G groups laid out on (pod, data)."""
+        return P(self.batch_axes, None)
+
+
+def null_plan(cfg) -> ShardingPlan:
+    return ShardingPlan(cfg, None)

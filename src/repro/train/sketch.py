@@ -1,0 +1,79 @@
+"""Space Saving sketches as first-class training/serving state.
+
+This is the paper's technique living inside the framework (DESIGN.md §3):
+
+  * token sketch — Summary with a leading group dim (G, k), G laid out on the
+    (pod, data) mesh axes. Every step, each group's token block performs one
+    chunked Space Saving update (comm-free: tokens and sketch share the
+    batch sharding). This IS the paper's Algorithm 1 block decomposition,
+    with mesh groups playing the role of OpenMP threads / MPI ranks.
+  * expert sketch — (k_e,) summary fed by the MoE router's per-step expert
+    counts (an exact histogram, so one merge_histogram per step).
+  * merge_sketches — the ParallelReduction: butterfly / hierarchical COMBINE
+    over the G dim (collectives over the pod/data axes under pjit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Summary, init_summary, merge_histogram,
+                        reduce_summaries, update_chunk)
+from repro.core.spacesaving import pad_stream
+
+
+def init_token_sketch(k: int, groups: int) -> Summary:
+    one = init_summary(k)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape),
+                        one)
+
+
+def init_expert_sketch(k: int) -> Summary:
+    return init_summary(k)
+
+
+def token_sketch_shapes(k: int, groups: int):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct((groups,) + a.shape,
+                                                       a.dtype),
+                        init_summary(k))
+
+
+def expert_sketch_shapes(k: int):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        init_summary(k))
+
+
+def update_token_sketch(sketch: Summary, tokens: jax.Array) -> Summary:
+    """tokens (B, S) — one chunked update per group.
+
+    The (B·S) stream is split evenly over the G groups; each group runs one
+    vectorized chunk update (sort → histogram → match → top-k).
+    """
+    g = sketch.items.shape[0]
+    flat = tokens.reshape(-1)
+    per = -(-flat.shape[0] // g)
+    flat = pad_stream(flat, per * g)
+    blocks = flat.reshape(g, per)
+    return jax.vmap(update_chunk)(sketch, blocks)
+
+
+def update_expert_sketch(sketch: Summary, expert_counts: jax.Array) -> Summary:
+    """expert_counts (E,) int32 — exact histogram merge (m₂ = 0)."""
+    e = expert_counts.shape[0]
+    items = jnp.arange(e, dtype=jnp.int32)
+    valid = expert_counts > 0
+    return merge_histogram(
+        sketch,
+        jnp.where(valid, items, -1),
+        jnp.where(valid, expert_counts.astype(sketch.counts.dtype), 0))
+
+
+def merge_sketches(sketch: Summary) -> Summary:
+    """ParallelReduction over the G dim (tree of vmapped COMBINEs).
+
+    Under pjit with the G dim sharded on (pod, data), XLA lowers the
+    log₂(G) pairing rounds into collective-permutes — the mesh-native
+    analogue of the paper's MPI user-defined reduction. Returns a single
+    global summary (replicated).
+    """
+    return reduce_summaries(sketch)

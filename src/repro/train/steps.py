@@ -1,0 +1,192 @@
+"""Step builders: train_step / prefill_step / serve_step / sketch merge.
+
+Every step integrates the Space Saving sketch as first-class state:
+  * train_step — fwd+bwd (remat'd scan), AdamW (fp32 master, sharded), token
+    sketch update on the input batch, expert sketch update from the MoE
+    router counts. Sketch updates are comm-free (group dim ≡ batch axes).
+  * prefill_step — forward with cache collection (serving prompt pass).
+  * serve_step — one decode token against the cache + emitted-token sketch.
+  * merge_step — the paper's ParallelReduction over the sketch group dim.
+
+Builders return (fn, in_shardings, out_shardings) ready for jax.jit; the
+dry-run lowers exactly these jitted functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import Summary
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding.rules import PlanOptions, ShardingPlan
+from repro.train import sketch as SK
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    token_sketch: Summary
+    expert_sketch: Summary
+
+
+# ---------------------------------------------------------------------------
+# State construction + sharding specs
+# ---------------------------------------------------------------------------
+
+def sketch_groups(plan: ShardingPlan) -> int:
+    g = 1
+    for a in plan.batch_axes:
+        g *= plan.axis_sizes.get(a, 1)
+    return max(g, 1)
+
+
+def init_train_state(cfg, key, plan: ShardingPlan) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        token_sketch=SK.init_token_sketch(cfg.sketch.k_counters,
+                                          sketch_groups(plan)),
+        expert_sketch=SK.init_expert_sketch(cfg.sketch.expert_counters),
+    )
+
+
+def train_state_shapes(cfg, plan: ShardingPlan) -> TrainState:
+    shapes = M.param_shapes(cfg)
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return TrainState(
+        params=shapes,
+        opt=adamw.AdamWState(master=f32(shapes), m=f32(shapes), v=f32(shapes),
+                             count=jax.ShapeDtypeStruct((), jnp.int32)),
+        token_sketch=SK.token_sketch_shapes(cfg.sketch.k_counters,
+                                            sketch_groups(plan)),
+        expert_sketch=SK.expert_sketch_shapes(cfg.sketch.expert_counters),
+    )
+
+
+def train_state_shardings(cfg, plan: ShardingPlan) -> TrainState:
+    axes = M.param_axes(cfg)
+    shapes = M.param_shapes(cfg)
+    pspecs = plan.param_specs(axes, shapes)
+    mesh = plan.mesh
+    rep = NamedSharding(mesh, P())
+    sk_tok = jax.tree.map(
+        lambda _: NamedSharding(mesh, plan.sketch_spec()),
+        SK.token_sketch_shapes(cfg.sketch.k_counters, sketch_groups(plan)))
+    sk_exp = jax.tree.map(
+        lambda _: rep,
+        SK.expert_sketch_shapes(cfg.sketch.expert_counters))
+    return TrainState(
+        params=pspecs,
+        opt=adamw.AdamWState(master=pspecs, m=pspecs, v=pspecs, count=rep),
+        token_sketch=sk_tok,
+        expert_sketch=sk_exp,
+    )
+
+
+def batch_shardings(cfg, plan: ShardingPlan, batch_shapes: dict):
+    mesh = plan.mesh
+    out = {}
+    for name, s in batch_shapes.items():
+        if name in ("tokens", "labels"):
+            out[name] = NamedSharding(mesh, plan.batch_spec(s.shape[0]))
+        elif name == "positions" and cfg.vlm is not None:
+            out[name] = NamedSharding(
+                mesh, P(None, *plan.batch_spec(s.shape[1])))
+        elif name in ("frames", "vision_embeds"):
+            out[name] = NamedSharding(
+                mesh, P(plan.batch_spec(s.shape[0])[0], None, None))
+        else:
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_shardings(cfg, plan: ShardingPlan, cache_shapes: dict):
+    """Decode caches: sequence-parallel KV, model-sharded SSM headdim."""
+    mesh = plan.mesh
+    out = {}
+    for name, s in cache_shapes.items():
+        b = s.shape[1]
+        bt = plan.batch_spec(b)[0]
+        if name in ("k", "v", "ck", "cv", "shared_k", "shared_v"):
+            seq = plan._cache_seq_axes((b,), seq_dim=s.shape[2])
+            out[name] = NamedSharding(mesh, P(None, bt, seq, None, None))
+        elif name in ("c_kv", "k_rope"):
+            seq = plan._cache_seq_axes((b,), seq_dim=s.shape[2])
+            out[name] = NamedSharding(mesh, P(None, bt, seq, None))
+        elif name == "ssm_state":
+            # (L,B,G,Hg,N,P): shard headdim P on model (always divisible)
+            out[name] = NamedSharding(mesh, P(None, bt, None, None, None,
+                                              "model"))
+        elif name == "conv":
+            out[name] = NamedSharding(mesh, P(None, bt, None, "model"))
+        else:
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, plan: ShardingPlan, *, lr_fn=None,
+                    schedule: str = "masked", sketch_enabled: bool = True):
+    lr_fn = lr_fn or adamw.cosine_schedule(3e-4, 100, 10_000)
+
+    def train_step(state: TrainState, batch):
+        def lf(p):
+            return M.loss_fn(p, batch, cfg, plan.wsc, schedule=schedule)
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+        new_params, new_opt, metrics = adamw.update(
+            grads, state.opt, M._dt(cfg), lr_fn=lr_fn)
+
+        tok_sketch = state.token_sketch
+        exp_sketch = state.expert_sketch
+        if sketch_enabled and cfg.sketch.enabled:
+            tok_sketch = SK.update_token_sketch(tok_sketch, batch["tokens"])
+            if cfg.moe is not None:
+                exp_sketch = SK.update_expert_sketch(
+                    exp_sketch, aux["expert_counts"])
+        metrics["loss"] = loss
+        if "aux_loss" in aux:
+            metrics["moe_aux_loss"] = aux["aux_loss"]
+        return TrainState(new_params, new_opt, tok_sketch, exp_sketch), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, plan: ShardingPlan, *, schedule: str = "masked"):
+    def prefill_step(params, batch):
+        logits, aux = M.forward(params, batch, cfg, plan.wsc,
+                                schedule=schedule, collect=True)
+        last = logits[:, -1]
+        return last, aux["cache"]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, plan: ShardingPlan, *, sketch_enabled: bool = True):
+    def serve_step(params, cache, tokens, position, token_sketch):
+        logits, new_cache, aux = M.decode_step(params, cache, tokens,
+                                               position, cfg, plan.wsc)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if sketch_enabled and cfg.sketch.enabled:
+            token_sketch = SK.update_token_sketch(token_sketch,
+                                                  next_tokens[:, None])
+        return next_tokens, new_cache, token_sketch
+
+    return serve_step
+
+
+def make_merge_step(cfg):
+    """Global sketch reduction — the paper's ParallelReduction as a jit fn."""
+    def merge_step(token_sketch: Summary) -> Summary:
+        return SK.merge_sketches(token_sketch)
+    return merge_step

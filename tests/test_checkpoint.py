@@ -1,0 +1,65 @@
+"""Checkpoint/restore: roundtrip, atomicity, retention, elastic sketch."""
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as CKPT
+from repro.core import init_summary, pad_stream, spacesaving_chunked
+from repro.core.exact import overestimation_violations
+from repro.train.sketch import init_token_sketch, update_token_sketch
+
+
+def _state(key):
+    return {"params": {"w": jax.random.normal(key, (8, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "count": jnp.int32(7)}
+
+
+def test_roundtrip_exact(tmp_path):
+    st = _state(jax.random.PRNGKey(0))
+    CKPT.save(tmp_path, 5, st, {"seed": 1, "step": 5})
+    assert CKPT.latest_step(tmp_path) == 5
+    restored, dstate = CKPT.restore(tmp_path, 5, st)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+    assert dstate == {"seed": 1, "step": 5}
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    st = _state(jax.random.PRNGKey(1))
+    CKPT.save(tmp_path, 3, st)
+    d = CKPT.save(tmp_path, 9, st)
+    (d / "_COMPLETE").unlink()            # simulate crash mid-publish
+    assert CKPT.latest_step(tmp_path) == 3
+
+
+def test_retention(tmp_path):
+    st = _state(jax.random.PRNGKey(2))
+    for s in [1, 2, 3, 4, 5]:
+        CKPT.save(tmp_path, s, st, keep=2)
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    st = _state(jax.random.PRNGKey(3))
+    CKPT.save(tmp_path, 1, st)
+    other = {"params": {"w": st["params"]["w"]}, "count": st["count"]}
+    with pytest.raises(AssertionError):
+        CKPT.restore(tmp_path, 1, other)
+
+
+def test_elastic_sketch_reshard_preserves_bounds(rng):
+    stream = np.minimum(rng.zipf(1.2, 20_000), 10**6).astype(np.int32)
+    sk = init_token_sketch(64, 8)
+    sk = update_token_sketch(sk, jnp.asarray(stream.reshape(8, -1)))
+    resharded = CKPT.reshard_token_sketch(sk, 4)
+    assert resharded.items.shape == (4, 64)
+    from repro.core import reduce_summaries
+    merged = reduce_summaries(resharded)
+    assert overestimation_violations(merged, stream) == 0

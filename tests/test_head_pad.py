@@ -1,0 +1,78 @@
+"""Gradient-exact head padding (q_head_pad): zero pads stay zero and the
+function equals the unpadded model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_arch
+from repro.models import model as M
+
+
+def _cfgs():
+    base = get_smoke_arch("qwen2.5-14b")     # 4 heads, kv 4 in smoke
+    base = dataclasses.replace(base, n_heads=6, n_kv_heads=2, head_dim=16,
+                               d_model=96)    # G=3 per group
+    padded = dataclasses.replace(base, q_head_pad=1)   # -> 8 q heads
+    return base, padded
+
+
+def test_padded_forward_matches_unpadded():
+    base, padded = _cfgs()
+    key = jax.random.PRNGKey(0)
+    p_base = M.init_params(base, key)
+    p_pad = M.init_params(padded, key)
+
+    # graft the base weights into the padded layout's real slots
+    g_real, gp, hd, kv = 3, 4, 16, 2
+    def graft(wq_b, wq_p):   # (D, KV*G*hd) -> (D, KV*Gp*hd)
+        b = wq_b.reshape(wq_b.shape[0], kv, g_real, hd)
+        p = jnp.zeros_like(wq_p).reshape(wq_p.shape[0], kv, gp, hd)
+        return p.at[:, :, :g_real].set(b).reshape(wq_p.shape)
+
+    def graft_o(wo_b, wo_p):
+        b = wo_b.reshape(kv, g_real, hd, wo_b.shape[-1])
+        p = jnp.zeros_like(wo_p).reshape(kv, gp, hd, wo_p.shape[-1])
+        return p.at[:, :g_real].set(b).reshape(wo_p.shape)
+
+    layers = dict(p_pad["layers"])
+    layers["wq"] = jax.vmap(graft)(p_base["layers"]["wq"], p_pad["layers"]["wq"])
+    layers["wo"] = jax.vmap(graft_o)(p_base["layers"]["wo"], p_pad["layers"]["wo"])
+    bq_b = p_base["layers"]["bq"].reshape(-1, kv, g_real, hd)
+    bq_p = jnp.zeros_like(p_pad["layers"]["bq"]).reshape(-1, kv, gp, hd)
+    layers["bq"] = bq_p.at[:, :, :g_real].set(bq_b).reshape(
+        p_pad["layers"]["bq"].shape)
+    for k in ("wk", "wv", "bk", "bv", "attn_norm_scale", "mlp_norm_scale",
+              "w_gate", "w_up", "w_down"):
+        layers[k] = p_base["layers"][k]
+    p_pad = dict(p_pad)
+    p_pad["layers"] = layers
+    for k in ("embed", "final_norm_scale", "lm_head"):
+        p_pad[k] = p_base[k]
+
+    tokens = jax.random.randint(key, (2, 16), 0, base.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    lb, _ = M.forward(p_base, batch, base)
+    lp, _ = M.forward(p_pad, batch, padded)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lp), atol=2e-4,
+                               rtol=2e-4)
+
+
+def test_pad_gradients_are_zero():
+    _, padded = _cfgs()
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(padded, key)
+    tokens = jax.random.randint(key, (2, 16), 0, padded.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    grads = jax.grad(lambda p: M.loss_fn(p, batch, padded)[0])(params)
+
+    kv, gp, g_real, hd = 2, 4, 3, 16
+    gq = np.asarray(grads["layers"]["wq"], np.float32).reshape(
+        padded.n_layers, -1, kv, gp, hd)
+    go = np.asarray(grads["layers"]["wo"], np.float32).reshape(
+        padded.n_layers, kv, gp, hd, -1)
+    assert np.abs(gq[:, :, :, g_real:]).max() == 0.0
+    assert np.abs(go[:, :, g_real:]).max() == 0.0
+    # real slots DO get gradient
+    assert np.abs(gq[:, :, :, :g_real]).max() > 0

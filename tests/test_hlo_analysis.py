@@ -1,0 +1,84 @@
+"""The trip-count-aware HLO analyzer vs known ground truth."""
+import subprocess
+import sys
+
+
+def _run(snippet, timeout=560):
+    code = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n" + snippet)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu", "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_scan_flops_counted_with_trip_count():
+    out = _run("""
+import jax, jax.numpy as jnp
+from jax import lax
+from repro.launch.hlo_analysis import analyze
+
+def f(ws, x):
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+    out, _ = lax.scan(body, x, ws)
+    return out.sum()
+
+ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+x = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+c = jax.jit(f).lower(ws, x).compile()
+a = analyze(c.as_text())
+expect = 12 * 2 * 8 * 256 * 256
+assert abs(a["flops"] - expect) / expect < 0.05, (a["flops"], expect)
+
+def g(ws, x):
+    for i in range(12):
+        x = jnp.tanh(x @ ws[i])
+    return x.sum()
+c2 = jax.jit(g).lower(ws, x).compile()
+a2 = analyze(c2.as_text())
+assert abs(a2["flops"] - expect) / expect < 0.05
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_collectives_multiplied_by_trips():
+    out = _run("""
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_mesh_shape
+
+mesh = make_mesh_shape((2, 4), ("data", "model"))
+def h(ws, x):
+    def body(cr, w):
+        w = jax.lax.with_sharding_constraint(w, NamedSharding(mesh, P(None, "model")))
+        y = jnp.tanh(cr @ w)
+        return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P("data", None))), None
+    out, _ = lax.scan(body, x, ws)
+    return out.sum()
+ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+x = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+c = jax.jit(h, in_shardings=(NamedSharding(mesh, P(None, None, "model")),
+                             NamedSharding(mesh, P("data", None)))).lower(ws, x).compile()
+a = analyze(c.as_text())
+ag = a["collectives"].get("all-gather", {"count": 0})
+assert ag["count"] >= 12, a["collectives"]
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_shape_parsing_units():
+    from repro.launch.hlo_analysis import _shape_bytes, roofline_terms
+    assert _shape_bytes("f32[8,256]{1,0}") == 8 * 256 * 4
+    assert _shape_bytes("bf16[2,4]") == 16
+    assert _shape_bytes("(f32[128]{0}, s32[64]{0})") == 128 * 4 + 64 * 4
+    t = roofline_terms(197e12, 819e9 / 2, 0.0)
+    assert t["bottleneck"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9

@@ -1,0 +1,68 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import match_weights_ref, query_ref
+
+SHAPES = [(8, 16), (100, 57), (512, 512), (1000, 300), (64, 2048), (2048, 64)]
+
+
+def _mk_inputs(rng, k, c, id_range=60):
+    s_items = rng.integers(-1, id_range, k).astype(np.int32)
+    hist = np.unique(rng.integers(0, id_range, c).astype(np.int32))
+    h_items = np.full(c, -1, np.int32)
+    h_items[:len(hist)] = hist
+    h_weights = (rng.integers(1, 100, c) * (h_items != -1)).astype(np.int32)
+    return jnp.asarray(s_items), jnp.asarray(h_items), jnp.asarray(h_weights)
+
+
+@pytest.mark.parametrize("k,c", SHAPES)
+def test_match_weights_pallas_vs_ref(rng, k, c):
+    si, hi, hw = _mk_inputs(rng, k, c)
+    aw_p, m_p = ops.match_weights(si, hi, hw, impl="pallas")
+    aw_r, m_r = match_weights_ref(si, hi, hw)
+    np.testing.assert_array_equal(np.asarray(aw_p), np.asarray(aw_r))
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+
+
+@pytest.mark.parametrize("block", [8, 64, 256])
+def test_match_weights_block_sweep(rng, block):
+    si, hi, hw = _mk_inputs(rng, 200, 130)
+    aw_p, m_p = ops.match_weights(si, hi, hw, impl="pallas",
+                                  block_k=block, block_c=max(block, 128))
+    aw_r, m_r = match_weights_ref(si, hi, hw)
+    np.testing.assert_array_equal(np.asarray(aw_p), np.asarray(aw_r))
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+
+
+def test_match_empty_never_matches(rng):
+    si = jnp.asarray([-1, -1, 3], jnp.int32)
+    hi = jnp.asarray([-1, 3, 7], jnp.int32)
+    hw = jnp.asarray([0, 5, 2], jnp.int32)
+    aw, m = ops.match_weights(si, hi, hw, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(aw), [0, 0, 5])
+    np.testing.assert_array_equal(np.asarray(m), [False, True, False])
+
+
+@pytest.mark.parametrize("k,q", [(16, 8), (100, 33), (512, 512), (300, 1000)])
+def test_query_pallas_vs_ref(rng, k, q):
+    si = rng.integers(-1, 50, k).astype(np.int32)
+    sc = (rng.integers(0, 1000, k) * (si != -1)).astype(np.int32)
+    se = (rng.integers(0, 50, k) * (si != -1)).astype(np.int32)
+    qs = rng.integers(-1, 80, q).astype(np.int32)
+    args = tuple(map(jnp.asarray, (si, sc, se, qs)))
+    f_p, e_p, m_p = ops.query(*args, impl="pallas")
+    f_r, e_r, m_r = query_ref(*args)
+    np.testing.assert_array_equal(np.asarray(f_p), np.asarray(f_r))
+    np.testing.assert_array_equal(np.asarray(e_p), np.asarray(e_r))
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+
+
+def test_auto_impl_dispatches_without_error(rng):
+    si, hi, hw = _mk_inputs(rng, 64, 64)
+    aw, m = ops.match_weights(si, hi, hw, impl="auto")
+    aw_r, _ = match_weights_ref(si, hi, hw)
+    np.testing.assert_array_equal(np.asarray(aw), np.asarray(aw_r))

@@ -1,0 +1,132 @@
+"""Per-arch reduced-config smoke tests (assignment deliverable f) +
+decode-vs-forward exactness for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_smoke_arch
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, key=KEY, s=S):
+    tokens = jax.random.randint(key, (B, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_dec.n_frames, cfg.d_model), jnp.float32) * 0.02
+    if cfg.vlm is not None:
+        batch["positions"] = jnp.broadcast_to(jnp.arange(s)[None, None],
+                                              (3, B, s))
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_and_train_step_smoke(name):
+    """One forward + loss + grad step on CPU: shapes, finiteness."""
+    cfg = get_smoke_arch(name)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: M.forward(p, b, cfg))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-14b", "yi-34b", "qwen1.5-110b",
+                                  "minicpm3-4b", "mamba2-130m", "zamba2-7b",
+                                  "qwen2-vl-72b"])
+def test_decode_matches_forward(name):
+    """Cached decode must reproduce the training forward logits exactly
+    (validates RoPE positions, cache writes, SSD recurrence, MLA
+    absorption). MoE archs are excluded: capacity routing legitimately
+    differs between batched prefill and decode (tested in test_moe)."""
+    cfg = get_smoke_arch(name)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg))(params, batch)
+
+    cache = M.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+                   static_argnames="pos")
+    errs = []
+    for i in range(S):
+        lg, cache, _ = step(params, cache, batch["tokens"][:, i:i+1], i)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, i]))))
+    assert max(errs) < 5e-4, (name, max(errs))
+
+
+def test_prefill_cache_feeds_decode():
+    """prefill(collect) cache must continue identically to forward logits."""
+    name = "qwen2.5-14b"
+    cfg = get_smoke_arch(name)
+    params = M.init_params(cfg, KEY)
+    full_batch = _batch(cfg)
+    logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg))(
+        params, full_batch)
+
+    half = S // 2
+    pre_batch = {k: (v[:, :half] if k in ("tokens", "labels") else v)
+                 for k, v in full_batch.items()}
+    _, aux = jax.jit(lambda p, b: M.forward(p, b, cfg, collect=True))(
+        params, pre_batch)
+    cache = aux["cache"]
+    # pad prompt cache out to S and decode the second half
+    cache = {k: jnp.pad(v, [(0, 0), (0, 0), (0, S - half), (0, 0), (0, 0)])
+             for k, v in cache.items()}
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+                   static_argnames="pos")
+    for i in range(half, S):
+        lg, cache, _ = step(params, cache, full_batch["tokens"][:, i:i+1], i)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, i])))
+        assert err < 5e-4, (i, err)
+
+
+def test_whisper_prefill_cache_feeds_decode():
+    cfg = get_smoke_arch("whisper-tiny")
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits_full, _ = jax.jit(lambda p, b: M.forward(p, b, cfg))(params, batch)
+    half = S // 2
+    pre = {k: (v[:, :half] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    _, aux = jax.jit(lambda p, b: M.forward(p, b, cfg, collect=True))(
+        params, pre)
+    cache = aux["cache"]
+    for k in ("k", "v"):
+        cache[k] = jnp.pad(cache[k],
+                           [(0, 0), (0, 0), (0, S - half), (0, 0), (0, 0)])
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+                   static_argnames="pos")
+    for i in range(half, S):
+        lg, cache, _ = step(params, cache, batch["tokens"][:, i:i+1], i)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, i])))
+        assert err < 5e-4, (i, err)
+
+
+def test_configs_match_assignment():
+    """Exact architecture table from the assignment."""
+    a = ARCHS
+    assert (a["qwen2.5-14b"].n_layers, a["qwen2.5-14b"].d_model) == (48, 5120)
+    assert a["qwen2.5-14b"].qkv_bias and a["qwen2.5-14b"].n_kv_heads == 8
+    assert (a["yi-34b"].n_layers, a["yi-34b"].d_model,
+            a["yi-34b"].n_heads) == (60, 7168, 56)
+    assert (a["qwen1.5-110b"].n_layers, a["qwen1.5-110b"].d_ff) == (80, 49152)
+    assert a["minicpm3-4b"].mla is not None
+    assert a["mamba2-130m"].ssm.d_state == 128
+    assert a["zamba2-7b"].ssm.d_state == 64 and a["zamba2-7b"].n_layers == 81
+    assert a["whisper-tiny"].enc_dec is not None
+    assert a["qwen2-vl-72b"].vlm is not None
+    assert (a["qwen3-moe-30b-a3b"].moe.n_experts,
+            a["qwen3-moe-30b-a3b"].moe.top_k) == (128, 8)
+    assert (a["mixtral-8x7b"].moe.n_experts, a["mixtral-8x7b"].moe.top_k,
+            a["mixtral-8x7b"].swa_window) == (8, 2, 4096)
+    assert len(a) == 10

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on the Space Saving invariants.
+
+For arbitrary streams, counter budgets, chunkings and shardings:
+  * overestimation:  f(x) ≤ f̂(x) ≤ f(x) + ε(x)    for every monitored x
+  * error bound:     ε(x) ≤ m  (min counter of a full summary)
+  * containment:     every x with f(x) > n/k is monitored
+  * COMBINE preserves all of the above for the union stream
+  * the chunked TPU path and the scalar oracle satisfy the same bounds
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EMPTY, combine, init_summary, min_frequency,
+                        pad_stream, spacesaving_chunked, spacesaving_scan)
+from repro.core.exact import exact_counts, overestimation_violations
+
+streams = st.lists(st.integers(min_value=0, max_value=30),
+                   min_size=1, max_size=300)
+
+
+def _check_invariants(s, stream_np):
+    assert overestimation_violations(s, stream_np) == 0
+    items = np.asarray(s.items)
+    errors = np.asarray(s.errors)
+    m = int(min_frequency(s))
+    full = (items != EMPTY).all()
+    if full:
+        assert (errors[items != EMPTY] <= m).all()
+    n = len(stream_np)
+    k = s.items.shape[0]
+    monitored = set(items[items != EMPTY].tolist())
+    for x, f in exact_counts(stream_np).items():
+        if f > n / k:
+            assert x in monitored, (x, f, n, k)
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=streams, k=st.integers(2, 40))
+def test_scan_invariants(stream, k):
+    arr = np.asarray(stream, np.int32)
+    s = spacesaving_scan(init_summary(k), jnp.asarray(arr))
+    _check_invariants(s, arr)
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=streams, k=st.integers(2, 40), chunk=st.integers(1, 64))
+def test_chunked_invariants(stream, k, chunk):
+    arr = np.asarray(stream, np.int32)
+    padded = pad_stream(jnp.asarray(arr), chunk)
+    s = spacesaving_chunked(init_summary(k), padded, chunk_size=chunk)
+    _check_invariants(s, arr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s1=streams, s2=streams, k=st.integers(2, 24))
+def test_combine_invariants(s1, s2, k):
+    a1 = np.asarray(s1, np.int32)
+    a2 = np.asarray(s2, np.int32)
+    sum1 = spacesaving_scan(init_summary(k), jnp.asarray(a1))
+    sum2 = spacesaving_scan(init_summary(k), jnp.asarray(a2))
+    merged = combine(sum1, sum2)
+    _check_invariants(merged, np.concatenate([a1, a2]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(stream=streams, k=st.integers(2, 24), p=st.integers(1, 5))
+def test_sharded_then_combined_invariants(stream, k, p):
+    """Alg 1: any block decomposition + pairwise COMBINE stays a valid
+    summary of the whole stream (the paper's correctness claim)."""
+    arr = np.asarray(stream, np.int32)
+    blocks = np.array_split(arr, p)
+    acc = init_summary(k)
+    for b in blocks:
+        s = spacesaving_scan(init_summary(k), jnp.asarray(b.astype(np.int32)))
+        acc = combine(acc, s)
+    _check_invariants(acc, arr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(stream=streams, k=st.integers(2, 24))
+def test_count_conservation_scan(stream, k):
+    """For the pure sequential algorithm Σ counts == n exactly."""
+    arr = np.asarray(stream, np.int32)
+    s = spacesaving_scan(init_summary(k), jnp.asarray(arr))
+    assert int(np.asarray(s.counts).sum()) == len(arr)
