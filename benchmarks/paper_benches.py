@@ -25,6 +25,7 @@ from repro.core.combine import _pad_pow2, combine
 from repro.core.exact import evaluate
 from repro.core.parallel import local_summaries
 from repro.data.synthetic import zipf_stream
+from repro.engine import EngineConfig, SketchEngine
 
 
 def _timeit(fn, *args, repeat=3):
@@ -142,8 +143,9 @@ def tab34_hybrid(emit):
 def fig56_formulation(emit):
     """Scalar per-item scan (the hash-table-style formulation that cannot
     exploit wide vector units — the 'Phi port') vs the chunked
-    sort+match+top_k formulation (TPU-native). Same machine, same
-    guarantees; the reformulation is the win."""
+    sort+match+top_k formulation (TPU-native) vs the engine's buffered
+    deferred-merge path. Same machine, same guarantees; the reformulation
+    (and then the merge amortization) is the win."""
     n = 200_000
     s = jnp.asarray(zipf_stream(n, 1.1, seed=5, max_id=10**7))
     for k in [500, 2000]:
@@ -153,10 +155,80 @@ def fig56_formulation(emit):
         padded = pad_stream(s, 2048)
         t_chunk = _timeit(lambda: jax.block_until_ready(
             spacesaving_chunked(init, padded, chunk_size=2048)))
+        engine = SketchEngine(EngineConfig(k=k, tenants=1, chunk=2048,
+                                           buffer_depth=8))
+        est = engine.init()
+        t_eng = _timeit(lambda: jax.block_until_ready(
+            engine.flush(engine.ingest(est, padded))))
         emit(f"fig56_scalar_scan_k{k}", t_scan,
              f"items_per_s={n/t_scan:.3e}")
         emit(f"fig56_chunked_k{k}", t_chunk,
              f"items_per_s={n/t_chunk:.3e};speedup={t_scan/t_chunk:.1f}x")
+        emit(f"fig56_engine_buffered_k{k}", t_eng,
+             f"items_per_s={n/t_eng:.3e};speedup_vs_chunked="
+             f"{t_chunk/t_eng:.2f}x")
 
 
-ALL = [fig1_are, fig2_scaling, tab34_hybrid, fig56_formulation]
+# ---------------------------------------------------------------------------
+# BENCH_sketch — perf trajectory of the sketch subsystem across PRs
+# ---------------------------------------------------------------------------
+
+def bench_sketch(emit):
+    """Updates/sec for the scan / chunked / engine-buffered paths plus
+    COMBINE latency vs k.  Returns the record run.py writes to
+    BENCH_sketch.json so the numbers are tracked across PRs."""
+    k, chunk, depth = 2048, 256, 8
+    n = 1 << 20
+    s = jnp.asarray(zipf_stream(n, 1.1, seed=11, max_id=10**7))
+    init = init_summary(k)
+
+    n_scan = 20_000
+    t_scan = _timeit(lambda: jax.block_until_ready(
+        spacesaving_scan(init, s[:n_scan])))
+    ups_scan = n_scan / t_scan
+
+    t_chunk = _timeit(lambda: jax.block_until_ready(
+        spacesaving_chunked(init, s, chunk_size=chunk)))
+    ups_chunk = n / t_chunk
+
+    def engine_ups(t):
+        engine = SketchEngine(EngineConfig(k=k, tenants=1, chunk=chunk,
+                                           buffer_depth=t))
+        est = engine.init()
+        dt = _timeit(lambda: jax.block_until_ready(
+            engine.flush(engine.ingest(est, s))))
+        return n / dt
+
+    ups_eng1 = engine_ups(1)       # central kernel dispatch, no buffering
+    ups_eng = engine_ups(depth)    # + deferred merges (the shipped default)
+
+    emit("sketch_updates_per_s_scan", f"{ups_scan:.3e}", f"n={n_scan}")
+    emit("sketch_updates_per_s_chunked", f"{ups_chunk:.3e}",
+         f"k={k};chunk={chunk}")
+    emit("sketch_updates_per_s_engine_T1", f"{ups_eng1:.3e}",
+         f"k={k};chunk={chunk}")
+    emit("sketch_updates_per_s_engine_buffered", f"{ups_eng:.3e}",
+         f"k={k};chunk={chunk};T={depth};"
+         f"speedup_vs_chunked={ups_eng/ups_chunk:.2f}x")
+
+    combine_latency = {}
+    for kc in [512, 2048, 8192]:
+        s1 = spacesaving_chunked(init_summary(kc), s[:n // 2], chunk_size=2048)
+        s2 = spacesaving_chunked(init_summary(kc), s[n // 2:], chunk_size=2048)
+        cjit = jax.jit(combine)
+        t_comb = _timeit(lambda: jax.block_until_ready(cjit(s1, s2)))
+        combine_latency[str(kc)] = t_comb
+        emit(f"sketch_combine_latency_k{kc}", f"{t_comb:.3e}", "seconds")
+
+    return {
+        "config": {"k": k, "chunk": chunk, "buffer_depth": depth, "n": n,
+                   "backend": jax.default_backend()},
+        "updates_per_sec": {
+            "scan": ups_scan,
+            "chunked": ups_chunk,
+            "engine_unbuffered_T1": ups_eng1,
+            "engine_buffered": ups_eng,
+        },
+        "speedup_engine_buffered_vs_chunked": ups_eng / ups_chunk,
+        "combine_latency_s": combine_latency,
+    }

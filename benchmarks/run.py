@@ -1,21 +1,28 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,value,derived`` CSV. Paper-accuracy/scaling benches run the
-real algorithms at CPU-scaled sizes; the roofline section summarizes the
+real algorithms at CPU-scaled sizes; the ``sketch`` section additionally
+writes BENCH_sketch.json (updates/sec for the scan / chunked /
+engine-buffered paths + COMBINE latency vs k) so the sketch subsystem's
+perf trajectory is tracked across PRs; the roofline section summarizes the
 dry-run artifacts (results/dryrun) if present.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,fig2,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,sketch,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,tab34,fig56,roofline")
+                    help="comma list: fig1,fig2,tab34,fig56,sketch,roofline")
+    ap.add_argument("--sketch-json", default="BENCH_sketch.json",
+                    help="where the sketch-bench record is written")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -36,6 +43,11 @@ def main() -> None:
         if only and key not in only:
             continue
         fn(emit)
+
+    if only is None or "sketch" in only:
+        record = P.bench_sketch(emit)
+        Path(args.sketch_json).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"sketch_json,{args.sketch_json},written", flush=True)
 
     if only is None or "roofline" in only:
         try:

@@ -1,42 +1,44 @@
-"""Streaming frequent items with incremental updates + distributed merge.
+"""Streaming frequent items through the SketchEngine.
 
-Feeds a stream in chunks to per-worker summaries (online), merges with the
-paper's COMBINE (hierarchical, as the hybrid MPI/OpenMP version), and
-queries frequencies with the serving kernel.
+Eight tenant sketches ingest the stream through the engine's buffered
+(deferred-merge) update path — appends are cheap, the vectorized merge runs
+once per ``buffer_depth`` chunks (QPOPSS-style amortization).  Reports merge
+with the paper's COMBINE via the engine's reduction strategy, and frequency
+queries go through the engine's dispatched query kernel.
 
   PYTHONPATH=src python examples/stream_frequent_items.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (estimate, init_summary, reduce_summaries,
-                        sort_summary, update_chunk)
 from repro.data.synthetic import zipf_stream
+from repro.engine import EngineConfig, SketchEngine
 
 K = 512
-WORKERS = 8
+WORKERS = 8          # tenants (in production: one per data-parallel group)
 CHUNK = 4096
+DEPTH = 4            # chunks buffered per deferred merge
 
-# one summary per worker (in production: one per data-parallel mesh group)
-summaries = jax.vmap(lambda _: init_summary(K))(jnp.arange(WORKERS))
-update = jax.jit(jax.vmap(update_chunk))
+engine = SketchEngine(EngineConfig(
+    k=K, tenants=WORKERS, chunk=CHUNK, buffer_depth=DEPTH,
+    reduction="hierarchical"))
+state = engine.init()
 
-print("streaming 40 chunks ×", WORKERS, "workers ×", CHUNK, "items")
+print(f"streaming 40 chunks × {WORKERS} workers × {CHUNK} items "
+      f"(merges deferred {DEPTH}×)")
 for step in range(40):
     block = zipf_stream(WORKERS * CHUNK, 1.1, seed=step, max_id=10**6)
-    summaries = update(summaries, jnp.asarray(block).reshape(WORKERS, CHUNK))
+    state = engine.update(state, jnp.asarray(block).reshape(WORKERS, CHUNK))
     if (step + 1) % 10 == 0:
-        merged = reduce_summaries(summaries)   # ParallelReduction
-        top = sort_summary(merged, ascending=False)
+        # merged view includes pending buffered chunks (ParallelReduction)
+        top_items, top_counts = engine.top(state, n=3)
         print(f"  after {(step+1)*WORKERS*CHUNK:9,d} items, top-3:",
               [(int(i), int(c)) for i, c in
-               zip(np.asarray(top.items)[:3], np.asarray(top.counts)[:3])])
+               zip(np.asarray(top_items), np.asarray(top_counts))])
 
-# frequency queries against the merged summary (ss_query kernel path)
-merged = reduce_summaries(summaries)
+# frequency queries against the merged summary (dispatched query kernel)
 queries = jnp.asarray([1, 2, 3, 50, 999_999], jnp.int32)
-f_hat, lower, monitored = estimate(merged, queries)
+f_hat, lower, monitored = engine.estimate(state, queries)
 print("\nqueries (item -> f̂ [lower bound] monitored?):")
 for q, f, lo, mon in zip(np.asarray(queries), np.asarray(f_hat),
                          np.asarray(lower), np.asarray(monitored)):

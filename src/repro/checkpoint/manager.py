@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Summary, reduce_summaries
-from repro.core.spacesaving import EMPTY
+from repro.core import reduce_summaries
+from repro.core.spacesaving import EMPTY, Summary
+from repro.engine import SketchState, flushed_summary, replayed_summary
 
 
 def _flatten(tree):
@@ -117,18 +118,30 @@ def restore(ckpt_dir, step: int, like_state, shardings=None):
 # Elastic helpers
 # ---------------------------------------------------------------------------
 
-def reshard_token_sketch(sketch: Summary, new_groups: int) -> Summary:
-    """Re-group a (G, k) token sketch for a different mesh size.
+def reshard_token_sketch(sketch: SketchState, new_groups: int, *,
+                         flush_mode: str = "deferred",
+                         match_fn=None) -> SketchState:
+    """Re-group a (G-tenant) token sketch state for a different mesh size.
 
-    COMBINE is the paper's merge operator: reducing all old groups and
-    seeding group 0 of the new layout preserves every summary bound (the
-    other groups restart empty and re-fill from the live stream).
+    Pending buffered chunks are merged first — with the owning engine's
+    ``flush_mode``/match kernel, so a reshard round-trip produces the same
+    counts a live ``flush`` would — then COMBINE, the paper's merge
+    operator, reduces all old groups; seeding group 0 of the new layout
+    preserves every summary bound (the other groups restart empty and
+    re-fill from the live stream).
     """
-    k = sketch.items.shape[-1]
-    merged = reduce_summaries(sketch)
+    k = sketch.k
+    view = flushed_summary if flush_mode == "deferred" else replayed_summary
+    merged = reduce_summaries(view(sketch, match_fn=match_fn))
     items = jnp.full((new_groups, k), EMPTY, jnp.int32).at[0].set(merged.items)
     counts = jnp.zeros((new_groups, k), merged.counts.dtype).at[0].set(
         merged.counts)
     errors = jnp.zeros((new_groups, k), merged.errors.dtype).at[0].set(
         merged.errors)
-    return Summary(items, counts, errors)
+    return SketchState(
+        summary=Summary(items, counts, errors),
+        buffer=jnp.full((new_groups,) + sketch.buffer.shape[1:], EMPTY,
+                        jnp.int32),
+        fill=jnp.zeros((), jnp.int32),
+        n=jnp.zeros((new_groups,), sketch.n.dtype).at[0].set(sketch.n.sum()),
+    )

@@ -63,13 +63,21 @@ class VLMConfig:
 
 @dataclass(frozen=True)
 class SketchConfig:
-    """Space Saving integration — the paper's technique as a framework feature."""
+    """Space Saving integration — the paper's technique as a framework feature.
+
+    All fields feed repro.engine.EngineConfig: the SketchEngine owns
+    buffering, kernel dispatch and reductions (DESIGN.md §6).
+    """
     enabled: bool = True
     k_counters: int = 2048          # counters for the token sketch
     expert_counters: int = 128      # counters for the MoE expert sketch
-    chunk: int = 2048               # stream chunk per vectorized update
+    chunk: int = 2048               # stream chunk per buffered update (C)
+    buffer_depth: int = 8           # chunks buffered per deferred merge (T)
+    flush_mode: str = "deferred"    # 'deferred' | 'replay' (engine flush)
+    kernel: str = "auto"            # 'auto' | 'pallas' | 'jnp' | 'sorted'
     merge_every: int = 32           # steps between global butterfly merges
-    reduction: str = "hierarchical"  # 'butterfly' | 'allgather' | 'hierarchical'
+    reduction: str = "hierarchical"  # 'local' | 'butterfly' | 'allgather'
+                                     # | 'hierarchical' (registry key)
 
 
 @dataclass(frozen=True)
@@ -168,7 +176,7 @@ def scaled(cfg: ArchConfig, **overrides) -> ArchConfig:
         small["hybrid_attn_every"] = 2
         small["n_layers"] = 4
     small["sketch"] = replace(cfg.sketch, k_counters=64, expert_counters=16,
-                              chunk=128, merge_every=4)
+                              chunk=128, buffer_depth=4, merge_every=4)
     small["param_dtype"] = "float32"
     small["compute_dtype"] = "float32"
     small.update(overrides)

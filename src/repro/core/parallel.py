@@ -80,13 +80,8 @@ def hierarchical_combine(s: Summary, inner_axis: str, outer_axis: str | None) ->
     return s
 
 
-REDUCTIONS = {
-    "butterfly": lambda s, inner, outer: butterfly_combine(
-        s, inner) if outer is None else hierarchical_combine(s, inner, outer),
-    "allgather": lambda s, inner, outer: allgather_combine(
-        s, inner if outer is None else (outer, inner)),
-    "hierarchical": hierarchical_combine,
-}
+# Strategy selection by name lives in the engine's reduction registry
+# (repro.engine.reductions), which wraps the three combinators above.
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""SketchEngine — batched multi-tenant sketching with deferred merges.
+
+The subsystem every consumer routes through (DESIGN.md §6):
+
+  * :class:`EngineConfig`  — geometry, flush mode, kernel dispatch and
+    reduction strategy, resolved in one place.
+  * :class:`SketchState`   — (B, k) summaries + a (B, T, C) pending-chunk
+    buffer; a plain pytree (checkpoints, donation and sharding all apply).
+  * :class:`SketchEngine`  — update/flush/ingest/merge/query methods.
+  * :func:`register_reduction` — plug-in point for new reduction strategies.
+"""
+from repro.engine.config import EngineConfig
+from repro.engine.engine import SketchEngine
+from repro.engine.reductions import (get_reduction, reduction_names,
+                                     register_reduction)
+from repro.engine.state import (SketchState, flushed_summary, init_state,
+                                replayed_summary)
+
+__all__ = [
+    "EngineConfig", "SketchEngine", "SketchState", "flushed_summary",
+    "init_state", "replayed_summary", "get_reduction", "reduction_names",
+    "register_reduction",
+]

@@ -1,0 +1,91 @@
+"""EngineConfig — one place for every sketching policy knob.
+
+Before the engine existed, each consumer picked its own chunk size, match
+kernel and reduction at the call site (train/sketch.py, launch/serve.py and
+the examples all hand-rolled slightly different defaults). EngineConfig
+centralizes:
+
+  * geometry   — counters ``k``, tenant count ``tenants`` (B), chunk ``chunk``
+                 (C) and buffer depth ``buffer_depth`` (T);
+  * flush mode — ``'deferred'`` (one merge per T-chunk window, QPOPSS-style
+                 amortization) or ``'replay'`` (per-chunk merge semantics,
+                 still executed as one fused scan at flush time);
+  * kernels    — ``'auto' | 'pallas' | 'jnp' | 'sorted'`` resolved ONCE here
+                 and threaded to every match/query call the engine makes;
+  * reduction  — a name in the reduction registry (engine/reductions.py).
+
+The dataclass is frozen and hashable so it can be captured statically by
+jitted closures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+KERNELS = ("auto", "pallas", "jnp", "sorted")
+FLUSH_MODES = ("deferred", "replay")
+
+# below this counter budget the dense k×c match beats sort+searchsorted on
+# CPU (measured in BENCH_sketch.json); 'auto' switches on this threshold.
+_SORTED_MIN_K = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of one :class:`~repro.engine.SketchEngine`."""
+
+    k: int = 2048                  # counters per tenant summary
+    tenants: int = 1               # B — concurrent sketches (mesh groups,
+                                   # serving shards, example workers, ...)
+    chunk: int = 2048              # C — stream elements per buffered chunk
+    buffer_depth: int = 8          # T — chunks buffered between merges
+    flush_mode: str = "deferred"   # 'deferred' | 'replay'
+    reduction: str = "local"       # key into the reduction registry
+    kernel: str = "auto"           # 'auto' | 'pallas' | 'jnp' | 'sorted'
+    axis_names: Tuple[str, ...] = ()   # mesh axes for distributed reductions
+    count_dtype: str = "int32"     # dtype name (kept as str: hashable)
+
+    def __post_init__(self):
+        if self.k <= 0 or self.tenants <= 0 or self.chunk <= 0:
+            raise ValueError(f"k/tenants/chunk must be positive: {self}")
+        if self.buffer_depth <= 0:
+            raise ValueError(f"buffer_depth must be >= 1, got "
+                             f"{self.buffer_depth}")
+        if self.flush_mode not in FLUSH_MODES:
+            raise ValueError(f"flush_mode {self.flush_mode!r} not in "
+                             f"{FLUSH_MODES}")
+        if self.kernel not in KERNELS:
+            raise ValueError(f"kernel {self.kernel!r} not in {KERNELS}")
+        from repro.engine.reductions import reduction_names
+        if self.reduction not in reduction_names():
+            raise ValueError(f"reduction {self.reduction!r} not registered; "
+                             f"have {sorted(reduction_names())}")
+
+    # -- resolved properties ------------------------------------------------
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.count_dtype)
+
+    def resolved_kernel(self) -> str:
+        """Collapse 'auto' to a concrete impl for the current backend."""
+        if self.kernel != "auto":
+            return self.kernel
+        if jax.default_backend() == "tpu":
+            return "pallas"
+        return "sorted" if self.k >= _SORTED_MIN_K else "jnp"
+
+    def match_fn(self):
+        """The match kernel every merge in this engine uses."""
+        from repro.kernels import ops as kops
+        return functools.partial(kops.match_weights,
+                                 impl=self.resolved_kernel())
+
+    def query_fn(self):
+        """The query kernel every estimate in this engine uses."""
+        from repro.kernels import ops as kops
+        return functools.partial(kops.query, impl=self.resolved_kernel())

@@ -1,0 +1,158 @@
+"""SketchEngine — batched multi-tenant Space Saving with deferred merges.
+
+One engine owns B concurrent sketches (mesh groups, serving replicas,
+example workers — "tenants") and the whole update policy:
+
+    update(state, chunk)        append one (B, C) chunk — O(append), no merge
+    flush(state)                force the pending window into the summaries
+    ingest(state, stream)       pad/chunk a (B, N) stream, fused update loop
+    absorb_histogram(state, …)  merge an exact histogram directly (m₂ = 0)
+    merged(state)               flush view + reduction strategy → one Summary
+    top(state, n)               heavy hitters of the merged summary
+    estimate(state, queries)    (f̂, lower bound, monitored) per query id
+
+Consumers (train/sketch.py, launch/serve.py, examples, benchmarks) hold an
+engine + a :class:`SketchState` pytree and never touch vmap/merge plumbing
+directly.  All methods are jitted and shape-polymorphic in the tenant dim —
+a merge-only engine can serve states of any B.
+
+Update cost model (the QPOPSS argument, DESIGN.md §6): an ``update`` call
+only appends to the (B, T, C) buffer; the sort + match + top_k merge runs
+once per T chunks over the whole window, so merge cost is amortized T× and
+the one top_k sees the (T·C) window at once instead of T small pools.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.spacesaving import (EMPTY, Summary, merge_histogram,
+                                    min_frequency, pad_stream, sort_summary)
+from repro.engine.config import EngineConfig
+from repro.engine.reductions import get_reduction
+from repro.engine.state import (SketchState, empty_buffer, flushed_summary,
+                                init_state, replayed_summary)
+
+
+class SketchEngine:
+    """Stateless orchestrator: all stream state lives in SketchState."""
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+        self._match_fn = config.match_fn()
+        self._query_fn = config.query_fn()
+        self._reduce = get_reduction(config.reduction)
+        # jit once per engine; shapes re-trace as needed
+        self.update = jax.jit(self._update)
+        self.flush = jax.jit(self._flush)
+        self.ingest = jax.jit(self._ingest)
+        self.merged = jax.jit(self._merged)
+        self.absorb_histogram = jax.jit(self._absorb_histogram)
+        self.estimate = jax.jit(self._estimate)
+        self.top = jax.jit(self._top, static_argnames=("n",))
+
+    # -- construction -------------------------------------------------------
+
+    def init(self) -> SketchState:
+        c = self.config
+        return init_state(c.k, c.tenants, c.buffer_depth, c.chunk,
+                          count_dtype=c.dtype)
+
+    def state_shapes(self) -> SketchState:
+        return jax.eval_shape(self.init)
+
+    # -- updates ------------------------------------------------------------
+
+    def _flush_view(self, state: SketchState) -> Summary:
+        """The summaries as if the pending buffer were merged now (pure)."""
+        view = (flushed_summary if self.config.flush_mode == "deferred"
+                else replayed_summary)
+        return view(state, match_fn=self._match_fn)
+
+    def _flush(self, state: SketchState) -> SketchState:
+        return SketchState(summary=self._flush_view(state),
+                           buffer=empty_buffer(state),
+                           fill=jnp.zeros((), jnp.int32),
+                           n=state.n)
+
+    def _update(self, state: SketchState, chunk: jax.Array) -> SketchState:
+        """Append one chunk per tenant; auto-flush when the buffer fills.
+
+        ``chunk`` is (B, c) with c <= C (EMPTY-padded up to C), or (c,) when
+        the engine has a single tenant.
+        """
+        b, t, c = state.buffer.shape
+        if chunk.ndim == 1:
+            chunk = chunk[None, :]
+        assert chunk.shape[0] == b, (chunk.shape, state.buffer.shape)
+        assert chunk.shape[1] <= c, (chunk.shape, state.buffer.shape)
+        chunk = jax.vmap(lambda ch: pad_stream(ch, c))(
+            chunk.astype(jnp.int32))
+        buf = lax.dynamic_update_slice(
+            state.buffer, chunk[:, None, :], (0, state.fill, 0))
+        appended = SketchState(
+            summary=state.summary,
+            buffer=buf,
+            fill=state.fill + 1,
+            n=state.n + (chunk != EMPTY).sum(-1).astype(state.n.dtype),
+        )
+        return lax.cond(appended.fill >= t, self._flush,
+                        lambda s: s, appended)
+
+    def _ingest(self, state: SketchState, stream: jax.Array) -> SketchState:
+        """Feed a whole (B, N) stream through the buffered update path."""
+        b, t, c = state.buffer.shape
+        if stream.ndim == 1:
+            stream = stream[None, :]
+        assert stream.shape[0] == b, (stream.shape, state.buffer.shape)
+        stream = jax.vmap(lambda s: pad_stream(s, c))(
+            stream.astype(jnp.int32))
+        chunks = stream.reshape(b, -1, c)            # (B, nC, C)
+        def body(st, ch):                            # ch: (B, C)
+            return self._update(st, ch), None
+        out, _ = lax.scan(body, state, jnp.moveaxis(chunks, 1, 0))
+        return out
+
+    def _absorb_histogram(self, state: SketchState, items: jax.Array,
+                          weights: jax.Array) -> SketchState:
+        """Merge an EXACT histogram straight into the summaries (m₂ = 0).
+
+        For producers that already aggregated their stream (e.g. MoE router
+        expert counts): no buffering — the histogram is one pre-reduced
+        chunk.  ``items``/``weights`` are (B, E), or (E,) broadcast to all
+        tenants.
+        """
+        b = state.tenants
+        if items.ndim == 1:
+            items = jnp.broadcast_to(items[None], (b,) + items.shape)
+            weights = jnp.broadcast_to(weights[None], (b,) + weights.shape)
+        summary = jax.vmap(
+            lambda s, i, w: merge_histogram(s, i, w,
+                                            match_fn=self._match_fn))(
+                state.summary, items,
+                weights.astype(state.summary.counts.dtype))
+        valid = (items != EMPTY) & (weights > 0)
+        n = state.n + jnp.where(valid, weights, 0).sum(-1).astype(
+            state.n.dtype)
+        return SketchState(summary, state.buffer, state.fill, n)
+
+    # -- queries ------------------------------------------------------------
+
+    def _merged(self, state: SketchState) -> Summary:
+        """One global summary: flush view, then the reduction strategy."""
+        return self._reduce(self._flush_view(state),
+                            tuple(self.config.axis_names))
+
+    def _top(self, state: SketchState, n: int = 10):
+        s = sort_summary(self._merged(state), ascending=False)
+        return s.items[:n], s.counts[:n]
+
+    def _estimate(self, state: SketchState, queries: jax.Array):
+        """(f̂, guaranteed lower bound, monitored?) per query id."""
+        s = self._merged(state)
+        f, eps, mon = self._query_fn(s.items, s.counts, s.errors, queries)
+        m = min_frequency(s)
+        f_hat = jnp.where(mon, f, m)      # m upper-bounds unmonitored items
+        lower = jnp.where(mon, f - eps, 0)
+        return f_hat, lower, mon

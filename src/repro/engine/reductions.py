@@ -1,0 +1,93 @@
+"""Reduction-strategy registry: how B tenant summaries become one.
+
+Every strategy has the signature
+
+    fn(stacked: Summary, axis_names: tuple[str, ...]) -> Summary
+
+where ``stacked`` carries the tenant dim on axis 0 (each leaf is (B, k)) and
+``axis_names`` are the mesh axes to reduce over *in addition to* the local
+tenant dim (empty outside shard_map — then every strategy degrades to the
+on-device tree reduction, which pjit lowers to collectives when the tenant
+dim is sharded).
+
+Built-ins mirror the paper's study (core/parallel.py):
+
+  * ``local``        — log₂(B) rounds of vmapped COMBINE on-device.
+  * ``butterfly``    — local reduce, then a recursive-doubling COMBINE
+                       allreduce over the first mesh axis.
+  * ``allgather``    — local reduce, then all_gather + tree-combine (the
+                       flat-MPI analogue).
+  * ``hierarchical`` — local reduce, then intra-pod butterfly followed by one
+                       cross-pod butterfly (the hybrid MPI/OpenMP winner).
+
+``register_reduction`` lets future PRs (sharded tenants, async ingest) plug
+in strategies without touching engine code.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.core.combine import reduce_summaries
+from repro.core.parallel import (allgather_combine, butterfly_combine,
+                                 hierarchical_combine)
+from repro.core.spacesaving import Summary
+
+Reduction = Callable[[Summary, Tuple[str, ...]], Summary]
+
+_REGISTRY: Dict[str, Reduction] = {}
+
+
+def register_reduction(name: str, fn: Reduction, *,
+                       overwrite: bool = False) -> None:
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"reduction {name!r} already registered")
+    _REGISTRY[name] = fn
+
+
+def get_reduction(name: str) -> Reduction:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown reduction {name!r}; have "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def reduction_names():
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-ins
+# ---------------------------------------------------------------------------
+
+def _local(stacked: Summary, axis_names) -> Summary:
+    return reduce_summaries(stacked)
+
+
+def _butterfly(stacked: Summary, axis_names) -> Summary:
+    s = reduce_summaries(stacked)
+    for ax in axis_names:
+        s = butterfly_combine(s, ax)
+    return s
+
+
+def _allgather(stacked: Summary, axis_names) -> Summary:
+    s = reduce_summaries(stacked)
+    if axis_names:
+        s = allgather_combine(s, tuple(axis_names))
+    return s
+
+
+def _hierarchical(stacked: Summary, axis_names) -> Summary:
+    s = reduce_summaries(stacked)
+    if axis_names:
+        inner = axis_names[0]
+        outer = axis_names[1] if len(axis_names) > 1 else None
+        s = hierarchical_combine(s, inner, outer)
+    return s
+
+
+register_reduction("local", _local)
+register_reduction("butterfly", _butterfly)
+register_reduction("allgather", _allgather)
+register_reduction("hierarchical", _hierarchical)

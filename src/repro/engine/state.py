@@ -1,0 +1,119 @@
+"""SketchState — the batched, buffered sketch pytree.
+
+Layout (B tenants, k counters, buffer depth T, chunk size C):
+
+  summary  Summary of (B, k) arrays — the merged per-tenant summaries
+  buffer   (B, T, C) int32          — pending stream chunks, EMPTY-padded;
+                                      slot t holds the t-th un-merged chunk
+  fill     () int32                 — buffered chunks not yet merged
+  n        (B,) count_dtype         — valid stream items ingested per tenant
+                                      (buffered items included)
+
+The buffer is the QPOPSS-style deferred-merge device: ``update`` only
+appends a chunk (a dynamic-slice store — no match, no top_k), and the
+expensive vectorized merge runs once per T chunks.  Unused buffer slots are
+all-EMPTY chunks, which the chunked merge treats as padding, so a partially
+filled buffer flushes with the same code path as a full one.
+
+The two flush views are pure functions (they never mutate the state):
+
+  * :func:`flushed_summary`  — 'deferred': one merge of the whole (T·C)
+    window per tenant; bitwise-identical to ``update_chunk(summary, window)``.
+  * :func:`replayed_summary` — 'replay': per-chunk merges in arrival order,
+    as one fused scan; bitwise-identical to folding ``update_chunk`` over
+    the pending chunks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.spacesaving import EMPTY, Summary, init_summary, update_chunk
+
+
+class SketchState(NamedTuple):
+    summary: Summary     # (B, k) leaves
+    buffer: jax.Array    # (B, T, C) int32
+    fill: jax.Array      # () int32
+    n: jax.Array         # (B,) count_dtype
+
+    # convenience views (mirror the bare-Summary attribute names so telemetry
+    # readers keep working on the batched state)
+    @property
+    def items(self) -> jax.Array:
+        return self.summary.items
+
+    @property
+    def counts(self) -> jax.Array:
+        return self.summary.counts
+
+    @property
+    def errors(self) -> jax.Array:
+        return self.summary.errors
+
+    @property
+    def tenants(self) -> int:
+        return self.buffer.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.summary.items.shape[-1]
+
+    @property
+    def depth(self) -> int:
+        return self.buffer.shape[1]
+
+    @property
+    def chunk(self) -> int:
+        return self.buffer.shape[2]
+
+
+def init_state(k: int, tenants: int, depth: int, chunk: int,
+               count_dtype=jnp.int32) -> SketchState:
+    one = init_summary(k, count_dtype=count_dtype)
+    summary = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (tenants,) + a.shape), one)
+    return SketchState(
+        summary=Summary(*summary),
+        buffer=jnp.full((tenants, depth, chunk), EMPTY, jnp.int32),
+        fill=jnp.zeros((), jnp.int32),
+        n=jnp.zeros((tenants,), count_dtype),
+    )
+
+
+def empty_buffer(state: SketchState) -> jax.Array:
+    return jnp.full_like(state.buffer, EMPTY)
+
+
+def flushed_summary(state: SketchState, match_fn=None) -> Summary:
+    """Deferred merge: each tenant's whole pending window in ONE merge.
+
+    Equals ``update_chunk(summary_b, buffer_b.reshape(T·C))`` exactly: the
+    window histogram is the sum of the chunk histograms, so one sort +
+    match + top_k replaces T of them (the amortization this engine exists
+    for).  Relative to folding ``update_chunk`` chunk-by-chunk the result
+    may differ bitwise (min-counter offsets are taken once per window, not
+    once per chunk) but every Space Saving bound still holds — the window
+    histogram is exact, i.e. a zero-error summary, so this is COMBINE with
+    m₂ = 0 (Cafaro et al.).
+    """
+    b, t, c = state.buffer.shape
+    window = state.buffer.reshape(b, t * c)
+    return jax.vmap(
+        lambda s, w: update_chunk(s, w, match_fn=match_fn))(
+            state.summary, window)
+
+
+def replayed_summary(state: SketchState, match_fn=None) -> Summary:
+    """Per-chunk merge semantics, executed as one fused scan over slots."""
+    def body(summ, chunk_t):       # chunk_t: (B, C)
+        upd = jax.vmap(
+            lambda s, ch: update_chunk(s, ch, match_fn=match_fn))(
+                summ, chunk_t)
+        return upd, None
+    out, _ = lax.scan(body, state.summary,
+                      jnp.moveaxis(state.buffer, 1, 0))
+    return out

@@ -7,6 +7,11 @@ Dispatch policy (``impl``):
                    fast path; on TPU the Pallas kernels control VMEM tiling.
   * ``'pallas'`` — force the kernel (interpret=True off-TPU): used by tests.
   * ``'jnp'``    — force the reference.
+  * ``'sorted'`` — sort + searchsorted merge-join (kernels/ref.py): O((k+c)·
+                   log k) instead of the dense k×c matrix; the fast path for
+                   large k off-TPU. Requires distinct valid summary items
+                   (true of every well-formed summary). Engine code selects
+                   this centrally via EngineConfig.kernel (see repro.engine).
 
 Both wrappers pad inputs to block multiples (EMPTY ids / zero weights are
 match-neutral) and strip the padding from the outputs.
@@ -37,6 +42,8 @@ def _pad1(a: jax.Array, mult: int, fill) -> jax.Array:
 def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
                   *, impl: str = "auto", block_k: int = 512, block_c: int = 512):
     """See kernels/ss_match.py. Returns (add_w (k,), matched (c,) bool)."""
+    if impl == "sorted":
+        return _ref.match_weights_sorted(s_items, h_items, h_weights)
     if impl == "jnp" or (impl == "auto" and not _on_tpu()):
         return _ref.match_weights_ref(s_items, h_items, h_weights)
     k, c = s_items.shape[0], h_items.shape[0]
@@ -53,6 +60,8 @@ def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
 def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
           block_k: int = 512, block_q: int = 512):
     """See kernels/ss_query.py. Returns (f̂, ε, monitored) per query."""
+    if impl == "sorted":
+        return _ref.query_sorted(s_items, s_counts, s_errors, queries)
     if impl == "jnp" or (impl == "auto" and not _on_tpu()):
         return _ref.query_ref(s_items, s_counts, s_errors, queries)
     k, q = s_items.shape[0], queries.shape[0]

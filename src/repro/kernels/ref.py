@@ -37,3 +37,48 @@ def query_ref(s_items: jax.Array, s_counts: jax.Array, s_errors: jax.Array,
     f_hat = (eq * s_counts[:, None]).sum(axis=0).astype(s_counts.dtype)
     eps = (eq * s_errors[:, None]).sum(axis=0).astype(s_errors.dtype)
     return f_hat, eps, monitored
+
+
+# ---------------------------------------------------------------------------
+# Sorted merge-join formulations — O((k+c)·log k) instead of O(k·c)
+# ---------------------------------------------------------------------------
+
+def _lookup_sorted(s_items: jax.Array, probes: jax.Array):
+    """For each probe id, the summary slot monitoring it (or a miss).
+
+    Returns ``(slot, hit)``: ``slot[j]`` indexes ``s_items``; ``hit[j]`` is
+    True iff probe j is a valid (non-EMPTY) id monitored by the summary.
+    Requires valid ``s_items`` entries to be distinct (true for any summary;
+    EMPTY may repeat freely — probes are >= 0 so EMPTY never matches).
+    """
+    k = s_items.shape[0]
+    order = jnp.argsort(s_items)
+    s_sorted = s_items[order]
+    idx = jnp.clip(jnp.searchsorted(s_sorted, probes, side="left"), 0, k - 1)
+    hit = (s_sorted[idx] == probes) & (probes != EMPTY)
+    return order[idx], hit
+
+
+def match_weights_sorted(s_items: jax.Array, h_items: jax.Array,
+                         h_weights: jax.Array):
+    """Same contract as :func:`match_weights_ref`, via sort + searchsorted.
+
+    One k-sort plus a binary-search per histogram entry replaces the dense
+    k×c match matrix: the CPU/large-k fast path used by the engine's flush
+    (the dense matrix is the MXU-friendly formulation the Pallas kernel
+    tiles on TPU). Bitwise-identical outputs for distinct valid s_items.
+    """
+    slot, hit = _lookup_sorted(s_items, h_items)
+    matched = hit
+    add_w = jnp.zeros(s_items.shape, h_weights.dtype).at[slot].add(
+        jnp.where(hit, h_weights, 0))
+    return add_w, matched
+
+
+def query_sorted(s_items: jax.Array, s_counts: jax.Array, s_errors: jax.Array,
+                 queries: jax.Array):
+    """Same contract as :func:`query_ref`, via sort + searchsorted."""
+    slot, hit = _lookup_sorted(s_items, queries)
+    f_hat = jnp.where(hit, s_counts[slot], 0).astype(s_counts.dtype)
+    eps = jnp.where(hit, s_errors[slot], 0).astype(s_errors.dtype)
+    return f_hat, eps, hit

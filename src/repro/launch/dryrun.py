@@ -90,9 +90,10 @@ def lower_cell(arch_name: str, shape_name: str, mesh_kind: str,
         tok_shard = NamedSharding(mesh, plan.batch_spec(b))
         g = S.sketch_groups(plan)
         from repro.train import sketch as SK
-        sk_shapes = SK.token_sketch_shapes(cfg.sketch.k_counters, g)
-        sk_shard = jax.tree.map(
-            lambda _: NamedSharding(mesh, plan.sketch_spec()), sk_shapes)
+        # decode payload is B tokens/step — size buffer slots to it
+        sk_shapes = SK.token_sketch_shapes(
+            cfg.sketch, g, chunk=max(1, shape.global_batch // g))
+        sk_shard = SK.sketch_shardings(plan, sk_shapes)
         jitted = jax.jit(
             step, in_shardings=(pshard, cache_shard, tok_shard, None, sk_shard),
             donate_argnums=(1, 4) if donate else ())

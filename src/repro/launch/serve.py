@@ -1,9 +1,11 @@
 """Serving driver: batched prefill → decode loop with hot-token telemetry.
 
-The Space Saving sketch rides along as serving telemetry: every decoded
-batch feeds the emitted-token stream; ``--report-every`` merges the sharded
-sketches (paper's ParallelReduction) and prints the current heavy hitters —
-k = O(1) memory regardless of traffic.
+The Space Saving sketch rides along as serving telemetry through the
+SketchEngine: every decoded batch feeds the emitted-token stream into the
+engine's buffered update path (merges amortized over ``buffer_depth``
+chunks); ``--report-every`` asks the engine for the merged heavy hitters
+(paper's ParallelReduction, pending buffer included) — k = O(1) memory
+regardless of traffic.
 
   python -m repro.launch.serve --arch mamba2-130m --smoke \
       --batch 4 --prompt-len 64 --gen 64
@@ -18,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch, get_smoke_arch
-from repro.core import sort_summary
 from repro.data.synthetic import TokenStream
 from repro.models import model as M
 from repro.sharding.rules import ShardingPlan
@@ -70,7 +71,13 @@ def main(argv=None):
     print(f"[serve] prefill {args.batch}×{args.prompt_len} in "
           f"{time.time()-t0:.2f}s")
 
-    sketch = SK.init_token_sketch(cfg.sketch.k_counters, 1)
+    # same group count as make_serve_step's engine (1 on this null plan);
+    # chunk = the decode payload (B tokens/step) so buffer slots hold real
+    # tokens, not EMPTY padding up to the training chunk size
+    groups = S.sketch_groups(plan)
+    engine = SK.token_engine(cfg.sketch, groups,
+                             chunk=max(1, args.batch // groups))
+    sketch = engine.init()
     tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     emitted = []
     t0 = time.time()
@@ -80,12 +87,11 @@ def main(argv=None):
         emitted.append(np.asarray(tokens_next))
         tokens = tokens_next[:, None]
         if (i + 1) % args.report_every == 0:
-            merged = SK.merge_sketches(sketch)
-            top = sort_summary(merged, ascending=False)
+            top_items, top_counts = engine.top(sketch, n=5)
             print(f"  [hot-tokens @ {i+1}] "
                   + ", ".join(f"{int(a)}:{int(c)}" for a, c in
-                              zip(np.asarray(top.items)[:5],
-                                  np.asarray(top.counts)[:5]) if a >= 0))
+                              zip(np.asarray(top_items),
+                                  np.asarray(top_counts)) if a >= 0))
     dt = time.time() - t0
     print(f"[serve] generated {args.gen}×{args.batch} tokens in {dt:.2f}s "
           f"({args.gen*args.batch/dt:.1f} tok/s)")

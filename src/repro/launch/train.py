@@ -32,7 +32,6 @@ from repro.models import model as M
 from repro.optim import adamw
 from repro.sharding.rules import PlanOptions, ShardingPlan
 from repro.train import steps as S
-from repro.train import sketch as SK
 
 
 def main(argv=None):

@@ -227,10 +227,8 @@ class ShardingPlan:
     def batch_spec(self, b: int) -> P:
         return P(self._batch(b), None)
 
-    def sketch_spec(self) -> P:
-        """Sketch state (G, k): G groups laid out on (pod, data)."""
-        return P(self.batch_axes, None)
-
+    # sketch-state shardings live with the engine adapter:
+    # repro.train.sketch.sketch_shardings (SketchState has 1-D..3-D leaves).
 
 def null_plan(cfg) -> ShardingPlan:
     return ShardingPlan(cfg, None)

@@ -1,79 +1,141 @@
 """Space Saving sketches as first-class training/serving state.
 
-This is the paper's technique living inside the framework (DESIGN.md §3):
+This is the paper's technique living inside the framework (DESIGN.md §3),
+rebuilt on the SketchEngine subsystem (DESIGN.md §6) — this module only
+adapts training/serving tensors into engine calls; buffering, kernel
+dispatch and reductions all live in ``repro.engine``:
 
-  * token sketch — Summary with a leading group dim (G, k), G laid out on the
-    (pod, data) mesh axes. Every step, each group's token block performs one
-    chunked Space Saving update (comm-free: tokens and sketch share the
-    batch sharding). This IS the paper's Algorithm 1 block decomposition,
-    with mesh groups playing the role of OpenMP threads / MPI ranks.
-  * expert sketch — (k_e,) summary fed by the MoE router's per-step expert
-    counts (an exact histogram, so one merge_histogram per step).
-  * merge_sketches — the ParallelReduction: butterfly / hierarchical COMBINE
-    over the G dim (collectives over the pod/data axes under pjit).
+  * token sketch — a SketchState with G tenants, G laid out on the
+    (pod, data) mesh axes.  Every step each group's token block goes through
+    the engine's buffered update path; the expensive merge runs once per
+    ``buffer_depth`` chunks (deferred-merge amortization).  The group dim IS
+    the paper's Algorithm 1 block decomposition, with mesh groups playing
+    the role of OpenMP threads / MPI ranks.
+  * expert sketch — a single-tenant SketchState fed by the MoE router's
+    per-step expert counts via ``absorb_histogram`` (an exact histogram, so
+    it merges directly with m₂ = 0 — no buffering needed).
+  * merge_sketches — the ParallelReduction: the engine's reduction strategy
+    over the tenant dim (collectives over the pod/data axes under pjit).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import (Summary, init_summary, merge_histogram,
-                        reduce_summaries, update_chunk)
-from repro.core.spacesaving import pad_stream
-
-
-def init_token_sketch(k: int, groups: int) -> Summary:
-    one = init_summary(k)
-    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape),
-                        one)
+from repro.core.spacesaving import Summary, pad_stream
+from repro.engine import EngineConfig, SketchEngine, SketchState
 
 
-def init_expert_sketch(k: int) -> Summary:
-    return init_summary(k)
+# ---------------------------------------------------------------------------
+# Engine construction from an ArchConfig's SketchConfig
+# ---------------------------------------------------------------------------
 
+def token_engine(sk_cfg, groups: int, *, chunk: int | None = None
+                 ) -> SketchEngine:
+    """The engine behind the token sketch: G tenants, buffered updates.
 
-def token_sketch_shapes(k: int, groups: int):
-    return jax.tree.map(lambda a: jax.ShapeDtypeStruct((groups,) + a.shape,
-                                                       a.dtype),
-                        init_summary(k))
-
-
-def expert_sketch_shapes(k: int):
-    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-                        init_summary(k))
-
-
-def update_token_sketch(sketch: Summary, tokens: jax.Array) -> Summary:
-    """tokens (B, S) — one chunked update per group.
-
-    The (B·S) stream is split evenly over the G groups; each group runs one
-    vectorized chunk update (sort → histogram → match → top-k).
+    ``chunk`` overrides ``sk_cfg.chunk`` for callers whose per-step payload
+    is much smaller than the training chunk (e.g. the decode loop feeds B
+    tokens per step — buffering them in C-wide slots would make every flush
+    sort/match mostly EMPTY padding).  Engine methods take the geometry from
+    the state, so any engine can still serve any state.
     """
-    g = sketch.items.shape[0]
+    return SketchEngine(EngineConfig(
+        k=sk_cfg.k_counters, tenants=groups,
+        chunk=chunk if chunk is not None else sk_cfg.chunk,
+        buffer_depth=sk_cfg.buffer_depth, flush_mode=sk_cfg.flush_mode,
+        reduction=sk_cfg.reduction, kernel=sk_cfg.kernel))
+
+
+def expert_engine(sk_cfg) -> SketchEngine:
+    """The engine behind the expert sketch: one tenant, histogram absorbs."""
+    return SketchEngine(EngineConfig(
+        k=sk_cfg.expert_counters, tenants=1, chunk=sk_cfg.expert_counters,
+        buffer_depth=1, flush_mode=sk_cfg.flush_mode,
+        reduction=sk_cfg.reduction, kernel=sk_cfg.kernel))
+
+
+# ---------------------------------------------------------------------------
+# State construction / shapes / shardings
+# ---------------------------------------------------------------------------
+
+def init_token_sketch(sk_cfg, groups: int, *,
+                      chunk: int | None = None) -> SketchState:
+    return token_engine(sk_cfg, groups, chunk=chunk).init()
+
+
+def init_expert_sketch(sk_cfg) -> SketchState:
+    return expert_engine(sk_cfg).init()
+
+
+def token_sketch_shapes(sk_cfg, groups: int, *,
+                        chunk: int | None = None) -> SketchState:
+    return token_engine(sk_cfg, groups, chunk=chunk).state_shapes()
+
+
+def expert_sketch_shapes(sk_cfg) -> SketchState:
+    return expert_engine(sk_cfg).state_shapes()
+
+
+def sketch_shardings(plan, shapes: SketchState) -> SketchState:
+    """NamedShardings for a SketchState: tenant dim on the batch axes.
+
+    summary leaves and ``n`` carry (G, ...) — G on (pod, data); the pending
+    buffer (G, T, C) likewise; ``fill`` is a replicated scalar.
+    """
+    mesh = plan.mesh
+
+    def shard(leaf):
+        ndim = len(leaf.shape)
+        spec = P(plan.batch_axes, *((None,) * (ndim - 1))) if ndim else P()
+        return NamedSharding(mesh, spec)
+
+    return SketchState(
+        summary=Summary(*(shard(l) for l in shapes.summary)),
+        buffer=shard(shapes.buffer),
+        fill=NamedSharding(mesh, P()),
+        n=shard(shapes.n),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-step updates + the ParallelReduction
+# ---------------------------------------------------------------------------
+
+def update_token_sketch(engine: SketchEngine, sketch: SketchState,
+                        tokens: jax.Array) -> SketchState:
+    """tokens (B, S) — block-decompose over the G tenants, buffered update.
+
+    The (B·S) stream is split evenly over the G groups and fed through the
+    engine's deferred-merge path: appends are O(chunk), merges amortized.
+    """
+    g = sketch.tenants
     flat = tokens.reshape(-1)
     per = -(-flat.shape[0] // g)
     flat = pad_stream(flat, per * g)
-    blocks = flat.reshape(g, per)
-    return jax.vmap(update_chunk)(sketch, blocks)
+    return engine.ingest(sketch, flat.reshape(g, per))
 
 
-def update_expert_sketch(sketch: Summary, expert_counts: jax.Array) -> Summary:
-    """expert_counts (E,) int32 — exact histogram merge (m₂ = 0)."""
+def update_expert_sketch(engine: SketchEngine, sketch: SketchState,
+                         expert_counts: jax.Array) -> SketchState:
+    """expert_counts (E,) int32 — exact histogram, direct merge (m₂ = 0)."""
     e = expert_counts.shape[0]
     items = jnp.arange(e, dtype=jnp.int32)
     valid = expert_counts > 0
-    return merge_histogram(
+    return engine.absorb_histogram(
         sketch,
         jnp.where(valid, items, -1),
-        jnp.where(valid, expert_counts.astype(sketch.counts.dtype), 0))
+        jnp.where(valid, expert_counts, 0))
 
 
-def merge_sketches(sketch: Summary) -> Summary:
-    """ParallelReduction over the G dim (tree of vmapped COMBINEs).
+def merge_sketches(engine: SketchEngine, sketch: SketchState) -> Summary:
+    """ParallelReduction over the tenant dim via the engine's strategy.
 
-    Under pjit with the G dim sharded on (pod, data), XLA lowers the
-    log₂(G) pairing rounds into collective-permutes — the mesh-native
-    analogue of the paper's MPI user-defined reduction. Returns a single
-    global summary (replicated).
+    Pending buffered chunks are included (flush view), so the merged summary
+    always reflects every ingested item.  Under pjit with the tenant dim
+    sharded on (pod, data), XLA lowers the pairing rounds into
+    collective-permutes — the mesh-native analogue of the paper's MPI
+    user-defined reduction.  Returns a single global summary (replicated).
     """
-    return reduce_summaries(sketch)
+    return engine.merged(sketch)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import Summary
+from repro.engine import SketchState
 from repro.models import model as M
 from repro.optim import adamw
 from repro.sharding.rules import PlanOptions, ShardingPlan
@@ -30,8 +31,8 @@ from repro.train import sketch as SK
 class TrainState(NamedTuple):
     params: Any
     opt: adamw.AdamWState
-    token_sketch: Summary
-    expert_sketch: Summary
+    token_sketch: SketchState
+    expert_sketch: SketchState
 
 
 # ---------------------------------------------------------------------------
@@ -50,9 +51,8 @@ def init_train_state(cfg, key, plan: ShardingPlan) -> TrainState:
     return TrainState(
         params=params,
         opt=adamw.init(params),
-        token_sketch=SK.init_token_sketch(cfg.sketch.k_counters,
-                                          sketch_groups(plan)),
-        expert_sketch=SK.init_expert_sketch(cfg.sketch.expert_counters),
+        token_sketch=SK.init_token_sketch(cfg.sketch, sketch_groups(plan)),
+        expert_sketch=SK.init_expert_sketch(cfg.sketch),
     )
 
 
@@ -64,9 +64,8 @@ def train_state_shapes(cfg, plan: ShardingPlan) -> TrainState:
         params=shapes,
         opt=adamw.AdamWState(master=f32(shapes), m=f32(shapes), v=f32(shapes),
                              count=jax.ShapeDtypeStruct((), jnp.int32)),
-        token_sketch=SK.token_sketch_shapes(cfg.sketch.k_counters,
-                                            sketch_groups(plan)),
-        expert_sketch=SK.expert_sketch_shapes(cfg.sketch.expert_counters),
+        token_sketch=SK.token_sketch_shapes(cfg.sketch, sketch_groups(plan)),
+        expert_sketch=SK.expert_sketch_shapes(cfg.sketch),
     )
 
 
@@ -76,12 +75,10 @@ def train_state_shardings(cfg, plan: ShardingPlan) -> TrainState:
     pspecs = plan.param_specs(axes, shapes)
     mesh = plan.mesh
     rep = NamedSharding(mesh, P())
-    sk_tok = jax.tree.map(
-        lambda _: NamedSharding(mesh, plan.sketch_spec()),
-        SK.token_sketch_shapes(cfg.sketch.k_counters, sketch_groups(plan)))
+    sk_tok = SK.sketch_shardings(
+        plan, SK.token_sketch_shapes(cfg.sketch, sketch_groups(plan)))
     sk_exp = jax.tree.map(
-        lambda _: rep,
-        SK.expert_sketch_shapes(cfg.sketch.expert_counters))
+        lambda _: rep, SK.expert_sketch_shapes(cfg.sketch))
     return TrainState(
         params=pspecs,
         opt=adamw.AdamWState(master=pspecs, m=pspecs, v=pspecs, count=rep),
@@ -138,6 +135,8 @@ def cache_shardings(cfg, plan: ShardingPlan, cache_shapes: dict):
 def make_train_step(cfg, plan: ShardingPlan, *, lr_fn=None,
                     schedule: str = "masked", sketch_enabled: bool = True):
     lr_fn = lr_fn or adamw.cosine_schedule(3e-4, 100, 10_000)
+    tok_engine = SK.token_engine(cfg.sketch, sketch_groups(plan))
+    exp_engine = SK.expert_engine(cfg.sketch)
 
     def train_step(state: TrainState, batch):
         def lf(p):
@@ -150,10 +149,11 @@ def make_train_step(cfg, plan: ShardingPlan, *, lr_fn=None,
         tok_sketch = state.token_sketch
         exp_sketch = state.expert_sketch
         if sketch_enabled and cfg.sketch.enabled:
-            tok_sketch = SK.update_token_sketch(tok_sketch, batch["tokens"])
+            tok_sketch = SK.update_token_sketch(tok_engine, tok_sketch,
+                                                batch["tokens"])
             if cfg.moe is not None:
                 exp_sketch = SK.update_expert_sketch(
-                    exp_sketch, aux["expert_counts"])
+                    exp_engine, exp_sketch, aux["expert_counts"])
         metrics["loss"] = loss
         if "aux_loss" in aux:
             metrics["moe_aux_loss"] = aux["aux_loss"]
@@ -173,12 +173,14 @@ def make_prefill_step(cfg, plan: ShardingPlan, *, schedule: str = "masked"):
 
 
 def make_serve_step(cfg, plan: ShardingPlan, *, sketch_enabled: bool = True):
+    tok_engine = SK.token_engine(cfg.sketch, sketch_groups(plan))
+
     def serve_step(params, cache, tokens, position, token_sketch):
         logits, new_cache, aux = M.decode_step(params, cache, tokens,
                                                position, cfg, plan.wsc)
         next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         if sketch_enabled and cfg.sketch.enabled:
-            token_sketch = SK.update_token_sketch(token_sketch,
+            token_sketch = SK.update_token_sketch(tok_engine, token_sketch,
                                                   next_tokens[:, None])
         return next_tokens, new_cache, token_sketch
 
@@ -186,7 +188,13 @@ def make_serve_step(cfg, plan: ShardingPlan, *, sketch_enabled: bool = True):
 
 
 def make_merge_step(cfg):
-    """Global sketch reduction — the paper's ParallelReduction as a jit fn."""
-    def merge_step(token_sketch: Summary) -> Summary:
-        return SK.merge_sketches(token_sketch)
+    """Global sketch reduction — the paper's ParallelReduction as a jit fn.
+
+    The engine's merge path is shape-polymorphic in the tenant dim, so one
+    merge step serves token sketches of any group count.
+    """
+    engine = SK.token_engine(cfg.sketch, 1)
+
+    def merge_step(token_sketch: SketchState) -> Summary:
+        return SK.merge_sketches(engine, token_sketch)
     return merge_step

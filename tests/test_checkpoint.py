@@ -10,7 +10,7 @@ import pytest
 from repro.checkpoint import manager as CKPT
 from repro.core import init_summary, pad_stream, spacesaving_chunked
 from repro.core.exact import overestimation_violations
-from repro.train.sketch import init_token_sketch, update_token_sketch
+from repro.engine import EngineConfig, SketchEngine
 
 
 def _state(key):
@@ -56,10 +56,14 @@ def test_structure_mismatch_rejected(tmp_path):
 
 def test_elastic_sketch_reshard_preserves_bounds(rng):
     stream = np.minimum(rng.zipf(1.2, 20_000), 10**6).astype(np.int32)
-    sk = init_token_sketch(64, 8)
-    sk = update_token_sketch(sk, jnp.asarray(stream.reshape(8, -1)))
+    engine = SketchEngine(EngineConfig(k=64, tenants=8, chunk=512,
+                                       buffer_depth=2))
+    sk = engine.ingest(engine.init(), jnp.asarray(stream.reshape(8, -1)))
+    assert int(sk.fill) > 0        # reshard must flush the pending buffer
     resharded = CKPT.reshard_token_sketch(sk, 4)
     assert resharded.items.shape == (4, 64)
+    assert resharded.buffer.shape == (4, 2, 512)
+    assert int(resharded.n.sum()) == stream.size
     from repro.core import reduce_summaries
-    merged = reduce_summaries(resharded)
+    merged = reduce_summaries(resharded.summary)
     assert overestimation_violations(merged, stream) == 0

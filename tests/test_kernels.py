@@ -38,6 +38,17 @@ def test_match_weights_block_sweep(rng, block):
     np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
 
 
+def test_match_weights_sorted_empty_slots(rng):
+    """EMPTY may repeat in s_items; the sorted impl must never match it."""
+    si = jnp.asarray([-1, -1, 3, -1, 9], jnp.int32)
+    hi = jnp.asarray([-1, 3, 7, 9, -1], jnp.int32)
+    hw = jnp.asarray([0, 5, 2, 4, 0], jnp.int32)
+    aw, m = ops.match_weights(si, hi, hw, impl="sorted")
+    np.testing.assert_array_equal(np.asarray(aw), [0, 0, 5, 0, 4])
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [False, True, False, True, False])
+
+
 def test_match_empty_never_matches(rng):
     si = jnp.asarray([-1, -1, 3], jnp.int32)
     hi = jnp.asarray([-1, 3, 7], jnp.int32)

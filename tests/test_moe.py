@@ -63,19 +63,24 @@ def test_capacity_dropping_is_graceful(rng):
 
 
 def test_expert_counts_feed_sketch(rng):
-    from repro.train.sketch import init_expert_sketch, update_expert_sketch
+    from repro.configs.base import SketchConfig
+    from repro.train.sketch import (expert_engine, init_expert_sketch,
+                                    update_expert_sketch)
+    sk_cfg = SketchConfig(expert_counters=8)
+    engine = expert_engine(sk_cfg)
     cfg = _cfg()
     p = moe_params(Ctx("init", jax.random.PRNGKey(2), jnp.float32), cfg)
     x = jnp.asarray(rng.standard_normal((1, 64, 32)), jnp.float32)
     _, aux = moe_layer(p, x, cfg)
-    sk = update_expert_sketch(init_expert_sketch(8), aux["expert_counts"])
+    sk = update_expert_sketch(engine, init_expert_sketch(sk_cfg),
+                              aux["expert_counts"])
     # every routed expert is a monitored item with its exact count
     counts = np.asarray(aux["expert_counts"])
-    items = np.asarray(sk.items)
+    items = np.asarray(sk.items)[0]
     for e, c in enumerate(counts):
         if c > 0:
             assert e in items
-            assert int(np.asarray(sk.counts)[items == e][0]) == int(c)
+            assert int(np.asarray(sk.counts)[0][items == e][0]) == int(c)
 
 
 def test_router_norm_topk(rng):

@@ -9,6 +9,10 @@ For arbitrary streams, counter budgets, chunkings and shardings:
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[test]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (EMPTY, combine, init_summary, min_frequency,
