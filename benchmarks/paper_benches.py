@@ -12,6 +12,7 @@ All benches print ``name,value,derived`` CSV rows through run.py.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -26,6 +27,7 @@ from repro.core.exact import evaluate
 from repro.core.parallel import local_summaries
 from repro.data.synthetic import zipf_stream
 from repro.engine import EngineConfig, SketchEngine
+from repro.kernels import ops as kops
 
 
 def _timeit(fn, *args, repeat=3):
@@ -211,14 +213,24 @@ def bench_sketch(emit):
          f"k={k};chunk={chunk};T={depth};"
          f"speedup_vs_chunked={ups_eng/ups_chunk:.2f}x")
 
-    combine_latency = {}
+    # COMBINE latency per kernel impl vs k — the merge core's perf record.
+    # 'jnp' is the dense k×k match (near-quadratic in k), 'sorted' the
+    # merge-join path the engine resolves to on CPU at large k.
+    combine_latency = {impl: {} for impl in ("jnp", "sorted")}
     for kc in [512, 2048, 8192]:
         s1 = spacesaving_chunked(init_summary(kc), s[:n // 2], chunk_size=2048)
         s2 = spacesaving_chunked(init_summary(kc), s[n // 2:], chunk_size=2048)
-        cjit = jax.jit(combine)
-        t_comb = _timeit(lambda: jax.block_until_ready(cjit(s1, s2)))
-        combine_latency[str(kc)] = t_comb
-        emit(f"sketch_combine_latency_k{kc}", f"{t_comb:.3e}", "seconds")
+        for impl in combine_latency:
+            mf = functools.partial(kops.combine_match, impl=impl)
+            cjit = jax.jit(lambda a, b: combine(a, b, match_fn=mf))
+            t_comb = _timeit(lambda: jax.block_until_ready(cjit(s1, s2)))
+            combine_latency[impl][str(kc)] = t_comb
+            emit(f"sketch_combine_latency_{impl}_k{kc}", f"{t_comb:.3e}",
+                 "seconds")
+    speedup_8192 = (combine_latency["jnp"]["8192"] /
+                    combine_latency["sorted"]["8192"])
+    emit("sketch_combine_sorted_speedup_k8192", f"{speedup_8192:.2f}",
+         "dense/sorted")
 
     return {
         "config": {"k": k, "chunk": chunk, "buffer_depth": depth, "n": n,
@@ -231,4 +243,5 @@ def bench_sketch(emit):
         },
         "speedup_engine_buffered_vs_chunked": ups_eng / ups_chunk,
         "combine_latency_s": combine_latency,
+        "combine_sorted_speedup_k8192": speedup_8192,
     }

@@ -132,7 +132,8 @@ def reshard_token_sketch(sketch: SketchState, new_groups: int, *,
     """
     k = sketch.k
     view = flushed_summary if flush_mode == "deferred" else replayed_summary
-    merged = reduce_summaries(view(sketch, match_fn=match_fn))
+    merged = reduce_summaries(view(sketch, match_fn=match_fn),
+                              match_fn=match_fn)
     items = jnp.full((new_groups, k), EMPTY, jnp.int32).at[0].set(merged.items)
     counts = jnp.zeros((new_groups, k), merged.counts.dtype).at[0].set(
         merged.counts)

@@ -1,0 +1,47 @@
+"""JAX version-portability shims (0.4.x ↔ 0.8.x API drift).
+
+The repo targets the current jax.shard_map / lax.pvary / AxisType surface;
+older runtimes (0.4.x) spell those ``jax.experimental.shard_map.shard_map``,
+lack ``pvary`` (varying-manual-axes tracking didn't exist yet, so the
+promotion is a no-op), and take no ``axis_types`` in ``jax.make_mesh``.
+Import from here instead of feature-testing at each call site.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+except ImportError:
+    AxisType = None
+
+try:
+    shard_map = jax.shard_map          # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+if hasattr(lax, "axis_size"):
+    def axis_size(axis_name) -> int:
+        return lax.axis_size(axis_name)
+else:
+    def axis_size(axis_name) -> int:  # 0.4.x: the frame IS the (static) size
+        from jax import core
+        return int(core.axis_frame(axis_name))
+
+
+if hasattr(lax, "pvary"):
+    def pvary(x, axis_names):
+        return lax.pvary(x, axis_names)
+else:
+    def pvary(x, axis_names):  # pre-varying-axes jax: nothing to promote
+        return x

@@ -3,7 +3,8 @@ from repro.core.combine import combine, empty_like, reduce_summaries
 from repro.core.parallel import (allgather_combine, butterfly_combine,
                                  frequent_items, hierarchical_combine,
                                  local_summaries, parallel_spacesaving)
-from repro.core.spacesaving import (EMPTY, Summary, chunk_histogram, estimate,
+from repro.core.spacesaving import (EMPTY, Summary, absorb_pool,
+                                    chunk_histogram, estimate,
                                     init_summary, merge_histogram,
                                     min_frequency, pad_stream, prune,
                                     sort_summary, spacesaving_chunked,
@@ -11,7 +12,8 @@ from repro.core.spacesaving import (EMPTY, Summary, chunk_histogram, estimate,
                                     update_scalar)
 
 __all__ = [
-    "EMPTY", "Summary", "chunk_histogram", "combine", "empty_like", "estimate",
+    "EMPTY", "Summary", "absorb_pool", "chunk_histogram", "combine",
+    "empty_like", "estimate",
     "init_summary", "merge_histogram", "min_frequency", "pad_stream", "prune",
     "sort_summary", "spacesaving_chunked", "spacesaving_scan", "update_chunk",
     "update_scalar", "reduce_summaries", "parallel_spacesaving",

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core.combine import combine, reduce_summaries
 from repro.core.spacesaving import (Summary, init_summary, pad_stream, prune,
                                     spacesaving_chunked)
@@ -38,25 +39,32 @@ from repro.core.spacesaving import (Summary, init_summary, pad_stream, prune,
 # Mesh-axis reductions (use inside shard_map)
 # ---------------------------------------------------------------------------
 
-def butterfly_combine(s: Summary, axis_name: str) -> Summary:
+def butterfly_combine(s: Summary, axis_name: str, *, match_fn=None) -> Summary:
     """Recursive-doubling COMBINE allreduce over ``axis_name``.
 
     Round i exchanges summaries between ranks differing in bit i and merges;
     after log₂(p) rounds every rank holds the combined summary. Each round
     moves one k-counter summary (3·k ints) per rank — the same communication
     volume per round as the paper's MPI reduction, but contention-free.
+
+    Recursive doubling needs a power-of-two axis (rank j's round-i partner
+    is j XOR 2^i); on any other axis size this falls back to
+    :func:`allgather_combine`, which is size-agnostic, instead of crashing.
+    ``match_fn`` (``kernels.ops.combine_match`` contract) selects the merge
+    kernel for every round.
     """
-    p = lax.axis_size(axis_name)
-    assert p & (p - 1) == 0, f"butterfly needs power-of-two axis, got {p}"
+    p = compat.axis_size(axis_name)
+    if p & (p - 1):
+        return allgather_combine(s, (axis_name,), match_fn=match_fn)
     for i in range(int(math.log2(p))):
         stride = 1 << i
         perm = [(j, j ^ stride) for j in range(p)]
         other = jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), s)
-        s = combine(s, other)
+        s = combine(s, other, match_fn=match_fn)
     return s
 
 
-def allgather_combine(s: Summary, axis_names) -> Summary:
+def allgather_combine(s: Summary, axis_names, *, match_fn=None) -> Summary:
     """Flat reduction: gather every rank's summary, tree-combine locally."""
     stacked = jax.tree.map(
         lambda a: lax.all_gather(a, axis_names, axis=0, tiled=False), s)
@@ -64,19 +72,20 @@ def allgather_combine(s: Summary, axis_names) -> Summary:
     def _flat(a):
         return a.reshape((-1,) + a.shape[-1:])
     stacked = Summary(*(_flat(x) for x in stacked))
-    return reduce_summaries(stacked)
+    return reduce_summaries(stacked, match_fn=match_fn)
 
 
-def hierarchical_combine(s: Summary, inner_axis: str, outer_axis: str | None) -> Summary:
+def hierarchical_combine(s: Summary, inner_axis: str,
+                         outer_axis: str | None, *, match_fn=None) -> Summary:
     """Two-level reduction: intra-pod butterfly, then cross-pod butterfly.
 
     The paper's hybrid MPI/OpenMP finding, mesh-native: communication over
     the slow (cross-pod / DCN) axis drops from log₂(p_total) rounds to
     log₂(n_pods) rounds, with the fast ICI axis absorbing the rest.
     """
-    s = butterfly_combine(s, inner_axis)
+    s = butterfly_combine(s, inner_axis, match_fn=match_fn)
     if outer_axis is not None:
-        s = butterfly_combine(s, outer_axis)
+        s = butterfly_combine(s, outer_axis, match_fn=match_fn)
     return s
 
 
@@ -109,10 +118,10 @@ def local_summaries(stream: jax.Array, *, p: int, k: int,
 
 
 def parallel_spacesaving(stream: jax.Array, *, k: int, p: int,
-                         chunk_size: int = 1024) -> Summary:
+                         chunk_size: int = 1024, match_fn=None) -> Summary:
     """Algorithm 1: local Space Saving per block, then ParallelReduction."""
     stacked = local_summaries(stream, p=p, k=k, chunk_size=chunk_size)
-    return reduce_summaries(stacked)
+    return reduce_summaries(stacked, match_fn=match_fn)
 
 
 def frequent_items(stream: jax.Array, *, k_majority: int, counters: int | None = None,

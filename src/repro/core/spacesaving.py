@@ -159,35 +159,72 @@ def merge_pool(s: Summary, cand_items, cand_counts, cand_errors) -> Summary:
     )
 
 
+def absorb_pool(s: Summary, cand_items: jax.Array, cand_counts: jax.Array,
+                cand_errors: jax.Array | None = None, *, m2=0,
+                match_fn=None) -> Summary:
+    """The shared merge primitive: match → COMBINE offsets → top-k prune.
+
+    Absorbs a candidate set (any zero-error histogram OR another summary's
+    counters) into ``s`` with the Cafaro et al. COMBINE offsets:
+
+      item in both:        f̂ ← f̂₁ + f̂₂       ε ← ε₁ + ε₂
+      s-only item:         f̂ ← f̂₁ + m₂       ε ← ε₁ + m₂
+      candidate-only item: f̂ ← f̂₂ + m₁       ε ← ε₂ + m₁
+
+    where ``m2`` is the candidates' min frequency (0 for an exact histogram
+    — then ``cand_errors=None`` skips the errors channel entirely) and m₁ is
+    ``min_frequency(s)``. Every reduction path — chunk update,
+    ``merge_histogram``, ``combine`` and through them all mesh combinators —
+    flows through this one function, so ``match_fn`` (the engine-resolved
+    kernel, contract of ``kernels.ops.combine_match``) governs every merge.
+    """
+    if match_fn is None:
+        from repro.kernels import ops as _kops
+        match_fn = _kops.combine_match
+    dtype = s.counts.dtype
+    m1 = min_frequency(s)
+    add_c, add_e, matched_s, matched_c = match_fn(
+        s.items, cand_items, cand_counts, cand_errors)
+
+    valid1 = s.items != EMPTY
+    m2 = jnp.asarray(m2, dtype)
+    zero = jnp.zeros((), dtype)
+    inc_c = jnp.where(matched_s, add_c.astype(dtype), m2)
+    inc_e = jnp.where(matched_s, zero if add_e is None else add_e.astype(dtype),
+                      m2)
+    upd = Summary(
+        items=s.items,
+        counts=jnp.where(valid1, s.counts + inc_c, 0),
+        errors=jnp.where(valid1, s.errors + inc_e, 0),
+    )
+
+    # only unmatched valid candidates survive into the pool (+m₁ offsets);
+    # invalid ones carry count -1 so top_k can never pick them over a real
+    # (or even an empty, count-0) counter.
+    cand_valid = (cand_items != EMPTY) & ~matched_c
+    ce = zero if cand_errors is None else cand_errors.astype(dtype)
+    cand = (
+        jnp.where(cand_valid, cand_items, EMPTY),
+        jnp.where(cand_valid, cand_counts.astype(dtype) + m1,
+                  jnp.asarray(-1, dtype)),
+        jnp.where(cand_valid, ce + m1, 0),
+    )
+    return merge_pool(upd, *cand)
+
+
 def merge_histogram(s: Summary, h_items: jax.Array, h_weights: jax.Array,
                     *, match_fn=None) -> Summary:
     """Merge an EXACT histogram into a summary (COMBINE with m₂ = 0).
 
     An exact histogram is a zero-error summary whose unmonitored items have
-    frequency exactly 0, so (Cafaro et al. [25]) the combine offsets are:
+    frequency exactly 0, so the absorb-pool offsets reduce to:
       item in both:        f̂ ← f̂ + w        ε unchanged
       summary-only item:   f̂ ← f̂ + 0        ε unchanged
       histogram-only item: f̂ ← w + m₁       ε ← m₁
-    followed by top-k pruning. All steps are dense vector ops; the match
-    matrix is the Pallas kernel's job on real hardware (kernels/ss_match.py),
-    with a jnp fallback here.
+    ``match_fn`` has the :func:`repro.kernels.ops.combine_match` contract
+    (the errors channel is skipped via ``cand_errors=None``).
     """
-    if match_fn is None:
-        from repro.kernels import ops as _kops
-        match_fn = _kops.match_weights
-    m1 = min_frequency(s)
-    # matched[i] = Σ_j [items_i == h_items_j] · w_j ; h items are distinct so
-    # this is either 0 or the exact chunk weight of item i.
-    add_w, h_matched = match_fn(s.items, h_items, h_weights)
-    counts = s.counts + add_w.astype(s.counts.dtype)
-    upd = Summary(items=s.items, counts=counts, errors=s.errors)
-
-    h_valid = (h_items != EMPTY) & ~h_matched
-    cand_counts = jnp.where(h_valid, h_weights.astype(s.counts.dtype) + m1,
-                            jnp.asarray(-1, s.counts.dtype))
-    cand_errors = jnp.where(h_valid, m1, 0).astype(s.counts.dtype)
-    cand_items = jnp.where(h_valid, h_items, EMPTY)
-    return merge_pool(upd, cand_items, cand_counts, cand_errors)
+    return absorb_pool(s, h_items, h_weights, None, m2=0, match_fn=match_fn)
 
 
 def update_chunk(s: Summary, chunk: jax.Array, *, match_fn=None) -> Summary:
@@ -223,8 +260,10 @@ def pvary_summary(s: Summary, axis_names) -> Summary:
     JAX ≥0.8 tracks varying-manual-axes: a freshly built init summary is
     unvarying, but a scan carry that went through per-shard updates is
     varying, so the init must be promoted with ``lax.pvary`` first.
+    On pre-varying-axes jax the promotion is a no-op (repro.compat).
     """
-    return jax.tree.map(lambda a: lax.pvary(a, axis_names), s)
+    from repro.compat import pvary
+    return jax.tree.map(lambda a: pvary(a, axis_names), s)
 
 
 def pad_stream(stream: jax.Array, multiple: int) -> jax.Array:

@@ -11,7 +11,9 @@ centralizes:
                  amortization) or ``'replay'`` (per-chunk merge semantics,
                  still executed as one fused scan at flush time);
   * kernels    — ``'auto' | 'pallas' | 'jnp' | 'sorted'`` resolved ONCE here
-                 and threaded to every match/query call the engine makes;
+                 and threaded to every match/query call the engine makes —
+                 including the COMBINE inside every reduction strategy
+                 (the unified merge core, DESIGN.md §6.3);
   * reduction  — a name in the reduction registry (engine/reductions.py).
 
 The dataclass is frozen and hashable so it can be captured statically by
@@ -29,9 +31,9 @@ import jax.numpy as jnp
 KERNELS = ("auto", "pallas", "jnp", "sorted")
 FLUSH_MODES = ("deferred", "replay")
 
-# below this counter budget the dense k×c match beats sort+searchsorted on
-# CPU (measured in BENCH_sketch.json); 'auto' switches on this threshold.
-_SORTED_MIN_K = 256
+# the dense↔sorted crossover threshold lives in kernels.ops.SORTED_MIN_K
+# (measured in BENCH_sketch.json) and is read lazily in resolved_kernel so
+# importing this module never pulls the Pallas kernel stack.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,12 +79,19 @@ class EngineConfig:
             return self.kernel
         if jax.default_backend() == "tpu":
             return "pallas"
-        return "sorted" if self.k >= _SORTED_MIN_K else "jnp"
+        from repro.kernels.ops import SORTED_MIN_K
+        return "sorted" if self.k >= SORTED_MIN_K else "jnp"
 
     def match_fn(self):
-        """The match kernel every merge in this engine uses."""
+        """The combine-match kernel every merge in this engine uses.
+
+        One callable (``kernels.ops.combine_match`` contract) covers the
+        whole merge surface: chunk-window flushes, histogram absorbs, and
+        summary-vs-summary COMBINE inside every reduction strategy — so
+        ``kernel=`` governs ``merged()``/reductions, not just ingestion.
+        """
         from repro.kernels import ops as kops
-        return functools.partial(kops.match_weights,
+        return functools.partial(kops.combine_match,
                                  impl=self.resolved_kernel())
 
     def query_fn(self):

@@ -23,6 +23,9 @@ the one top_k sees the (T·C) window at once instead of T small pools.
 """
 from __future__ import annotations
 
+import functools
+import inspect
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -35,6 +38,16 @@ from repro.engine.state import (SketchState, empty_buffer, flushed_summary,
                                 init_state, replayed_summary)
 
 
+def _accepts_match_fn(fn) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    return ("match_fn" in params
+            or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()))
+
+
 class SketchEngine:
     """Stateless orchestrator: all stream state lives in SketchState."""
 
@@ -42,7 +55,13 @@ class SketchEngine:
         self.config = config
         self._match_fn = config.match_fn()
         self._query_fn = config.query_fn()
-        self._reduce = get_reduction(config.reduction)
+        # the engine-resolved kernel drives the COMBINEs inside the
+        # reduction too (unified merge core); reductions registered with
+        # the legacy (stacked, axis_names) signature still work.
+        reduce_fn = get_reduction(config.reduction)
+        if _accepts_match_fn(reduce_fn):
+            reduce_fn = functools.partial(reduce_fn, match_fn=self._match_fn)
+        self._reduce = reduce_fn
         # jit once per engine; shapes re-trace as needed
         self.update = jax.jit(self._update)
         self.flush = jax.jit(self._flush)

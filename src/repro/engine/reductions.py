@@ -2,13 +2,17 @@
 
 Every strategy has the signature
 
-    fn(stacked: Summary, axis_names: tuple[str, ...]) -> Summary
+    fn(stacked: Summary, axis_names: tuple[str, ...], *,
+       match_fn=None) -> Summary
 
 where ``stacked`` carries the tenant dim on axis 0 (each leaf is (B, k)) and
 ``axis_names`` are the mesh axes to reduce over *in addition to* the local
 tenant dim (empty outside shard_map — then every strategy degrades to the
 on-device tree reduction, which pjit lowers to collectives when the tenant
-dim is sharded).
+dim is sharded). ``match_fn`` is the engine-resolved combine-match kernel
+(``kernels.ops.combine_match`` contract) driving every COMBINE the strategy
+performs; strategies registered without the keyword still work — the engine
+only passes it when the callable accepts it.
 
 Built-ins mirror the paper's study (core/parallel.py):
 
@@ -60,30 +64,30 @@ def reduction_names():
 # Built-ins
 # ---------------------------------------------------------------------------
 
-def _local(stacked: Summary, axis_names) -> Summary:
-    return reduce_summaries(stacked)
+def _local(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
+    return reduce_summaries(stacked, match_fn=match_fn)
 
 
-def _butterfly(stacked: Summary, axis_names) -> Summary:
-    s = reduce_summaries(stacked)
+def _butterfly(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn)
     for ax in axis_names:
-        s = butterfly_combine(s, ax)
+        s = butterfly_combine(s, ax, match_fn=match_fn)
     return s
 
 
-def _allgather(stacked: Summary, axis_names) -> Summary:
-    s = reduce_summaries(stacked)
+def _allgather(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn)
     if axis_names:
-        s = allgather_combine(s, tuple(axis_names))
+        s = allgather_combine(s, tuple(axis_names), match_fn=match_fn)
     return s
 
 
-def _hierarchical(stacked: Summary, axis_names) -> Summary:
-    s = reduce_summaries(stacked)
+def _hierarchical(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn)
     if axis_names:
         inner = axis_names[0]
         outer = axis_names[1] if len(axis_names) > 1 else None
-        s = hierarchical_combine(s, inner, outer)
+        s = hierarchical_combine(s, inner, outer, match_fn=match_fn)
     return s
 
 

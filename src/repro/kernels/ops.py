@@ -13,8 +13,10 @@ Dispatch policy (``impl``):
                    (true of every well-formed summary). Engine code selects
                    this centrally via EngineConfig.kernel (see repro.engine).
 
-Both wrappers pad inputs to block multiples (EMPTY ids / zero weights are
-match-neutral) and strip the padding from the outputs.
+All wrappers pad inputs to block multiples (EMPTY ids / zero weights are
+match-neutral) and strip the padding from the outputs. ``combine_match`` is
+the unified matcher behind every merge path (chunk update, histogram absorb
+and summary-vs-summary COMBINE — see core/spacesaving.py:absorb_pool).
 """
 from __future__ import annotations
 
@@ -22,10 +24,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.ss_combine import combine_match_pallas
 from repro.kernels.ss_match import match_weights_pallas
 from repro.kernels.ss_query import query_pallas
 
 EMPTY = -1
+
+# below this counter budget the dense k×c match beats sort+searchsorted on
+# CPU (measured in BENCH_sketch.json); 'auto' resolution — here for
+# combine_match, in EngineConfig.resolved_kernel for the engine — switches
+# on this threshold.
+SORTED_MIN_K = 256
 
 
 def _on_tpu() -> bool:
@@ -55,6 +64,49 @@ def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
     add_w, matched = match_weights_pallas(
         sp, hp, wp, block_k=bk, block_c=bc, interpret=not _on_tpu())
     return add_w[:k].astype(h_weights.dtype), matched[:c]
+
+
+def combine_match(s_items: jax.Array, c_items: jax.Array,
+                  c_counts: jax.Array, c_errors: jax.Array | None = None, *,
+                  impl: str = "auto", block_k: int = 512, block_c: int = 512):
+    """See kernels/ref.py (contract) / kernels/ss_combine.py (TPU kernel).
+
+    The one matcher behind every merge — summary-vs-summary COMBINE carries
+    counts AND errors; the exact-histogram merge passes ``c_errors=None``
+    and the errors channel is skipped (ref/sorted) or dropped (pallas).
+    Returns (add_c (k,), add_e (k,) | None, matched_s (k,), matched_c (c,)).
+
+    Unlike ``match_weights``, 'auto' off-TPU picks the sorted merge-join at
+    k >= SORTED_MIN_K (the dense match is near-quadratic in k, and every
+    absorb_pool caller feeds well-formed distinct-id summaries/histograms,
+    so the sorted path is always bitwise-safe here).
+    """
+    if impl == "auto" and not _on_tpu():
+        impl = "sorted" if s_items.shape[0] >= SORTED_MIN_K else "jnp"
+    if impl not in ("sorted", "jnp"):
+        # the Pallas kernel contracts in int32; wider count dtypes would
+        # silently truncate, so route them to the (exact) sorted merge-join.
+        wide = any(a is not None and jnp.dtype(a.dtype).itemsize > 4
+                   for a in (c_counts, c_errors))
+        if wide:
+            impl = "sorted"
+    if impl == "sorted":
+        return _ref.combine_match_sorted(s_items, c_items, c_counts, c_errors)
+    if impl == "jnp":
+        return _ref.combine_match_ref(s_items, c_items, c_counts, c_errors)
+    k, c = s_items.shape[0], c_items.shape[0]
+    bk = min(block_k, max(8, 1 << (k - 1).bit_length()))
+    bc = min(block_c, max(128, 1 << (c - 1).bit_length()))
+    sp = _pad1(s_items, bk, EMPTY)
+    cip = _pad1(c_items, bc, EMPTY)
+    ccp = _pad1(c_counts.astype(jnp.int32), bc, 0)
+    cep = _pad1((jnp.zeros_like(c_counts) if c_errors is None
+                 else c_errors).astype(jnp.int32), bc, 0)
+    add_c, add_e, ms, mc = combine_match_pallas(
+        sp, cip, ccp, cep, block_k=bk, block_c=bc, interpret=not _on_tpu())
+    return (add_c[:k].astype(c_counts.dtype),
+            None if c_errors is None else add_e[:k].astype(c_errors.dtype),
+            ms[:k], mc[:c])
 
 
 def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",

@@ -82,3 +82,58 @@ def query_sorted(s_items: jax.Array, s_counts: jax.Array, s_errors: jax.Array,
     f_hat = jnp.where(hit, s_counts[slot], 0).astype(s_counts.dtype)
     eps = jnp.where(hit, s_errors[slot], 0).astype(s_errors.dtype)
     return f_hat, eps, hit
+
+
+# ---------------------------------------------------------------------------
+# Combine-match: the unified matcher behind EVERY merge (absorb-pool core)
+# ---------------------------------------------------------------------------
+#
+# Contract (shared by ref / sorted / Pallas implementations):
+#
+#   (add_c, add_e, matched_s, matched_c) =
+#       combine_match(s_items (k,), c_items (c,), c_counts (c,), c_errors (c,)?)
+#
+#   add_c[i]     = Σ_j [s_i == c_j] · c_counts[j]     (the matched f̂₂ / weight)
+#   add_e[i]     = Σ_j [s_i == c_j] · c_errors[j]     (None iff c_errors is None)
+#   matched_s[i] = ∃j [s_i == c_j]                    (bool, summary side)
+#   matched_c[j] = ∃i [s_i == c_j]                    (bool, candidate side)
+#
+# EMPTY ids never match. ``c_errors=None`` is the exact-histogram case
+# (zero-error candidates, COMBINE with m₂ = 0): the errors channel is skipped
+# entirely so the hot ingestion path pays nothing for the unification.
+
+
+def combine_match_ref(s_items: jax.Array, c_items: jax.Array,
+                      c_counts: jax.Array, c_errors: jax.Array | None = None):
+    """Dense k×c reference (and MXU-style formulation the Pallas kernel tiles)."""
+    eq = (s_items[:, None] == c_items[None, :])
+    eq &= (s_items != EMPTY)[:, None]
+    eq &= (c_items != EMPTY)[None, :]
+    add_c = (eq * c_counts[None, :]).sum(axis=1).astype(c_counts.dtype)
+    add_e = (None if c_errors is None else
+             (eq * c_errors[None, :]).sum(axis=1).astype(c_errors.dtype))
+    return add_c, add_e, eq.any(axis=1), eq.any(axis=0)
+
+
+def combine_match_sorted(s_items: jax.Array, c_items: jax.Array,
+                         c_counts: jax.Array, c_errors: jax.Array | None = None):
+    """Sorted merge-join combine-match — O((k+c)·log k) instead of O(k·c).
+
+    One k-sort plus a binary search per candidate; this is what makes
+    summary-vs-summary COMBINE cheap at large k (the dense match is
+    near-quadratic in k when c = k). Bitwise-identical to
+    :func:`combine_match_ref` whenever valid ids are distinct on each side
+    (true for every well-formed summary and exact histogram): each summary
+    slot then matches at most one candidate, so the scatter-add recovers the
+    dense masked sum exactly.
+    """
+    slot, hit = _lookup_sorted(s_items, c_items)
+    src = jnp.where(hit, c_counts, 0)
+    add_c = jnp.zeros(s_items.shape, c_counts.dtype).at[slot].add(src)
+    add_e = None
+    if c_errors is not None:
+        add_e = jnp.zeros(s_items.shape, c_errors.dtype).at[slot].add(
+            jnp.where(hit, c_errors, 0))
+    matched_s = jnp.zeros(s_items.shape, jnp.int32).at[slot].add(
+        hit.astype(jnp.int32)) > 0
+    return add_c, add_e, matched_s, hit

@@ -122,6 +122,7 @@ def _operand_names(line: str):
     if not m:
         return []
     depth = 1
+    nest = 0        # []/{} nesting: operands may be typed (f32[8,256]{1,0} %x)
     args = []
     buf = ""
     for ch in m.group(1):
@@ -131,7 +132,11 @@ def _operand_names(line: str):
             depth -= 1
             if depth == 0:
                 break
-        if ch == "," and depth == 1:
+        elif ch in "[{":
+            nest += 1
+        elif ch in "]}":
+            nest -= 1
+        if ch == "," and depth == 1 and nest == 0:
             args.append(buf)
             buf = ""
         else:

@@ -4,26 +4,24 @@ never touches jax device state (required for the dry-run's XLA_FLAGS dance).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_shape(shape, axes):
     """Arbitrary mesh (tests, PP experiments)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (host/CPU) devices exist."""
     n = len(jax.devices())
     assert n_data * n_model <= n, (n_data, n_model, n)
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"))

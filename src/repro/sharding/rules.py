@@ -124,7 +124,12 @@ class ShardingPlan:
                     assign[i] = cand
                     used.update(flat)
                     break
-        return P(*[assign.get(i) for i in range(len(names))])
+        # normalize 1-tuples ("data",) -> "data": PartitionSpec treats them
+        # identically but only some jax versions canonicalize, and spec
+        # comparisons (tests, manifest diffs) expect the scalar form.
+        def _scalar(a):
+            return a[0] if isinstance(a, tuple) and len(a) == 1 else a
+        return P(*[_scalar(assign.get(i)) for i in range(len(names))])
 
     def param_specs(self, axes_tree, shapes_tree):
         return jax.tree.map(

@@ -1,4 +1,6 @@
 import os
+import subprocess
+import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
@@ -9,3 +11,23 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def run_distributed(snippet: str, n_dev: int = 8, timeout: int = 560) -> str:
+    """Run a snippet under a forced host device count, in a subprocess so
+    the XLA_FLAGS override never leaks into the main pytest process.
+
+    The env is a minimal whitelist (hermetic against the caller's jax
+    settings) but keeps the real PATH/HOME — hardcoding them breaks on CI
+    runners where the suite doesn't run as root.
+    """
+    code = (f"import os\nos.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={n_dev}'\n" + snippet)
+    env = {"PYTHONPATH": "src",
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+           "JAX_PLATFORMS": "cpu",
+           "HOME": os.environ.get("HOME", "/tmp")}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout

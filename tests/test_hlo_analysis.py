@@ -1,18 +1,5 @@
 """The trip-count-aware HLO analyzer vs known ground truth."""
-import subprocess
-import sys
-
-
-def _run(snippet, timeout=560):
-    code = ("import os\n"
-            "os.environ['XLA_FLAGS'] = "
-            "'--xla_force_host_platform_device_count=8'\n" + snippet)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu", "HOME": "/root"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
+from conftest import run_distributed as _run
 
 
 def test_scan_flops_counted_with_trip_count():

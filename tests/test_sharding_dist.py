@@ -1,23 +1,6 @@
 """Distribution tests that need >1 device: run in subprocesses so the
 XLA_FLAGS device-count override never leaks into the main pytest process."""
-import json
-import subprocess
-import sys
-
-import pytest
-
-
-def _run(snippet: str, timeout=560):
-    code = ("import os\n"
-            "os.environ['XLA_FLAGS'] = "
-            "'--xla_force_host_platform_device_count=8'\n" + snippet)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu",
-                            "HOME": "/root"})
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
+from conftest import run_distributed as _run
 
 
 def test_sharded_train_step_matches_single_device():
@@ -64,6 +47,7 @@ def test_butterfly_and_hierarchical_reductions_agree():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import *
 from repro.core.spacesaving import pvary_summary
 from repro.core.exact import evaluate, overestimation_violations
@@ -81,8 +65,8 @@ def f(mode):
         else:
             s = allgather_combine(s, ("pod", "data"))
         return jax.tree.map(lambda x: x[None], s)
-    return jax.shard_map(inner, mesh=mesh, in_specs=P(("pod","data")),
-                         out_specs=P(("pod","data")))
+    return shard_map(inner, mesh=mesh, in_specs=P(("pod","data")),
+                     out_specs=P(("pod","data")))
 blocks = jnp.asarray(stream).reshape(8, -1)
 for mode in ("hier", "flat"):
     out = f(mode)(blocks)
