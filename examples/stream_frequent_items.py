@@ -2,9 +2,11 @@
 
 Eight tenant sketches ingest the stream through the engine's buffered
 (deferred-merge) update path — appends are cheap, the vectorized merge runs
-once per ``buffer_depth`` chunks (QPOPSS-style amortization).  Reports merge
-with the paper's COMBINE via the engine's reduction strategy, and frequency
-queries go through the engine's dispatched query kernel.
+once per ``buffer_depth`` chunks (QPOPSS-style amortization).  Reports go
+through the read-side QueryService: the engine publishes immutable
+versioned snapshots (ingest buffer included, never flushed), and the
+QueryFrontend answers top-n / point / k-majority queries against them on
+the same dispatched kernels.
 
   PYTHONPATH=src python examples/stream_frequent_items.py
 """
@@ -13,6 +15,7 @@ import numpy as np
 
 from repro.data.synthetic import zipf_stream
 from repro.engine import EngineConfig, SketchEngine
+from repro.service import QueryFrontend
 
 K = 512
 WORKERS = 8          # tenants (in production: one per data-parallel group)
@@ -23,6 +26,7 @@ engine = SketchEngine(EngineConfig(
     k=K, tenants=WORKERS, chunk=CHUNK, buffer_depth=DEPTH,
     reduction="hierarchical"))
 state = engine.init()
+frontend = QueryFrontend.for_engine(engine)
 
 print(f"streaming 40 chunks × {WORKERS} workers × {CHUNK} items "
       f"(merges deferred {DEPTH}×)")
@@ -30,16 +34,24 @@ for step in range(40):
     block = zipf_stream(WORKERS * CHUNK, 1.1, seed=step, max_id=10**6)
     state = engine.update(state, jnp.asarray(block).reshape(WORKERS, CHUNK))
     if (step + 1) % 10 == 0:
-        # merged view includes pending buffered chunks (ParallelReduction)
-        top_items, top_counts = engine.top(state, n=3)
-        print(f"  after {(step+1)*WORKERS*CHUNK:9,d} items, top-3:",
-              [(int(i), int(c)) for i, c in
-               zip(np.asarray(top_items), np.asarray(top_counts))])
+        # publish a frozen versioned view (pending chunks included; the
+        # ingest buffer keeps filling) and query it via the frontend
+        snap = engine.snapshot(state)
+        print(f"  after {(step+1)*WORKERS*CHUNK:9,d} items "
+              f"(snapshot v{snap.version}), top-3:",
+              [(r["item"], r["count"]) for r in frontend.top_table(snap, 3)])
 
-# frequency queries against the merged summary (dispatched query kernel)
-queries = jnp.asarray([1, 2, 3, 50, 999_999], jnp.int32)
-f_hat, lower, monitored = engine.estimate(state, queries)
+# frequency queries + the paper's guarantee-split k-majority report,
+# all against one immutable snapshot
+snap = engine.snapshot(state)
+queries = [1, 2, 3, 50, 999_999]
+f_hat, lower, monitored = frontend.estimate(snap, queries)
 print("\nqueries (item -> f̂ [lower bound] monitored?):")
-for q, f, lo, mon in zip(np.asarray(queries), np.asarray(f_hat),
+for q, f, lo, mon in zip(queries, np.asarray(f_hat),
                          np.asarray(lower), np.asarray(monitored)):
     print(f"  {int(q):8d} -> {int(f):9d} [{int(lo):9d}] {bool(mon)}")
+
+report = frontend.k_majority_report(snap, k_majority=100)
+print(f"\n100-majority (threshold {report.threshold:,d} of "
+      f"n={report.n:,d}): {report.guaranteed_items.size} guaranteed, "
+      f"{report.unconfirmed_items.size} unconfirmed candidates")

@@ -4,16 +4,16 @@ from repro.core.parallel import (allgather_combine, butterfly_combine,
                                  frequent_items, hierarchical_combine,
                                  local_summaries, parallel_spacesaving)
 from repro.core.spacesaving import (EMPTY, Summary, absorb_pool,
-                                    chunk_histogram, estimate,
-                                    init_summary, merge_histogram,
+                                    bounded_estimates, chunk_histogram,
+                                    estimate, init_summary, merge_histogram,
                                     min_frequency, pad_stream, prune,
                                     sort_summary, spacesaving_chunked,
                                     spacesaving_scan, update_chunk,
                                     update_scalar)
 
 __all__ = [
-    "EMPTY", "Summary", "absorb_pool", "chunk_histogram", "combine",
-    "empty_like", "estimate",
+    "EMPTY", "Summary", "absorb_pool", "bounded_estimates",
+    "chunk_histogram", "combine", "empty_like", "estimate",
     "init_summary", "merge_histogram", "min_frequency", "pad_stream", "prune",
     "sort_summary", "spacesaving_chunked", "spacesaving_scan", "update_chunk",
     "update_scalar", "reduce_summaries", "parallel_spacesaving",

@@ -33,6 +33,24 @@ def true_heavy_hitters(stream: np.ndarray, k_majority: int) -> dict[int, int]:
     return {i: c for i, c in exact_counts(stream).items() if c >= thresh}
 
 
+def score_reported(reported: dict[int, int], truth: dict[int, int],
+                   exact: dict[int, int]) -> Metrics:
+    """Paper §4 metrics for any reported {item: f̂} set (the metric core).
+
+    The single definition of precision / recall / ARE (empty-set
+    conventions included) shared by :func:`evaluate` and the accuracy
+    harness (``repro.eval.accuracy``).
+    """
+    hits = [i for i in reported if i in truth]
+    precision = len(hits) / len(reported) if reported else 1.0
+    recall = len(hits) / len(truth) if truth else 1.0
+    rel_errors = [abs(reported[i] - exact.get(i, 0)) / max(exact.get(i, 0), 1)
+                  for i in reported]
+    are = float(np.mean(rel_errors)) if rel_errors else 0.0
+    return Metrics(are=are, precision=precision, recall=recall,
+                   n_true=len(truth), n_reported=len(reported))
+
+
 def evaluate(summary: Summary, stream: np.ndarray, k_majority: int,
              reported_mask: np.ndarray | None = None) -> Metrics:
     """Score a summary against the exact oracle (paper §4 metrics)."""
@@ -45,17 +63,8 @@ def evaluate(summary: Summary, stream: np.ndarray, k_majority: int,
         reported_mask = (items != EMPTY) & (counts >= thresh)
     reported = {int(i): int(c) for i, c in zip(items[reported_mask],
                                                counts[reported_mask])}
-    truth = true_heavy_hitters(stream, k_majority)
-    exact = exact_counts(stream)
-
-    hits = [i for i in reported if i in truth]
-    precision = len(hits) / len(reported) if reported else 1.0
-    recall = len(hits) / len(truth) if truth else 1.0
-    rel_errors = [abs(reported[i] - exact.get(i, 0)) / max(exact.get(i, 0), 1)
-                  for i in reported]
-    are = float(np.mean(rel_errors)) if rel_errors else 0.0
-    return Metrics(are=are, precision=precision, recall=recall,
-                   n_true=len(truth), n_reported=len(reported))
+    return score_reported(reported, true_heavy_hitters(stream, k_majority),
+                          exact_counts(stream))
 
 
 def overestimation_violations(summary: Summary, stream: np.ndarray) -> int:

@@ -279,16 +279,29 @@ def pad_stream(stream: jax.Array, multiple: int) -> jax.Array:
 # Queries / reporting
 # ---------------------------------------------------------------------------
 
+def bounded_estimates(s: Summary, f: jax.Array, eps: jax.Array,
+                      monitored: jax.Array):
+    """Raw query-kernel outputs → the (f̂, lower, monitored) triple.
+
+    The one place the estimate bound semantics live (shared by
+    ``core.estimate``, ``SketchEngine.estimate`` and the QueryFrontend):
+    unmonitored items report the min counter m — an upper bound on any
+    unmonitored item's true frequency — with lower bound 0; monitored
+    items report (f̂, f̂ − ε). Thus lower ≤ f ≤ f̂ always holds.
+    """
+    m = min_frequency(s)
+    f_hat = jnp.where(monitored, f, m)
+    lower = jnp.where(monitored, f - eps, jnp.zeros((), f.dtype))
+    return f_hat, lower, monitored
+
+
 def estimate(s: Summary, queries: jax.Array):
     """(f̂, guaranteed-lower-bound, monitored?) for a batch of item ids."""
     eq = (s.items[:, None] == queries[None, :]) & (s.items != EMPTY)[:, None]
     monitored = eq.any(axis=0)
-    f_hat = (eq * s.counts[:, None]).sum(axis=0)
+    f = (eq * s.counts[:, None]).sum(axis=0)
     eps = (eq * s.errors[:, None]).sum(axis=0)
-    m = min_frequency(s)
-    f_hat = jnp.where(monitored, f_hat, m)       # upper bound for unmonitored
-    lower = jnp.where(monitored, f_hat - eps, 0)
-    return f_hat, lower, monitored
+    return bounded_estimates(s, f, eps, monitored)
 
 
 def prune(s: Summary, n: int, k_majority: int):
@@ -296,7 +309,13 @@ def prune(s: Summary, n: int, k_majority: int):
 
     Returns (items, f̂, candidate_mask, guaranteed_mask); ``guaranteed`` uses
     the per-counter lower bound f̂ − ε, i.e. items certain to be k-majority.
+
+    Degenerate inputs are well-defined: an all-EMPTY summary or n = 0 (no
+    items ingested yet) yield empty masks — EMPTY slots are excluded
+    outright and their zero counts can never reach the ≥ 1 threshold.
     """
+    if not isinstance(k_majority, jax.Array) and int(k_majority) < 1:
+        raise ValueError(f"k_majority must be >= 1, got {k_majority}")
     thresh = n // k_majority + 1
     cand = (s.items != EMPTY) & (s.counts >= thresh)
     guaranteed = cand & (s.counts - s.errors >= thresh)

@@ -17,13 +17,41 @@ import dataclasses
 import numpy as np
 
 
+def fold_ids(ids: np.ndarray, max_id: int, mode: str = "mod") -> np.ndarray:
+    """Map 1-based item ids above ``max_id`` back into [1, max_id].
+
+    ``'mod'``  — ``(x-1) % max_id + 1``: spreads the tail mass across the
+    whole id range, adding only O(P(tail)/max_id) to each id's probability,
+    so head frequencies (what the accuracy harness scores) stay faithful to
+    the true zipf law.
+    ``'clip'`` — ``min(x, max_id)``: piles ALL tail mass onto ``max_id``
+    itself. At low skew that mass is large (P(X > 10⁶) ≈ 0.27 for
+    zipf(1.1)), which manufactures a spurious heavy hitter at the cap and
+    distorts precision/recall. Kept only to reproduce the pre-fix streams
+    bit-for-bit (no in-tree caller defaults to it).
+    """
+    if mode == "mod":
+        return (ids - 1) % max_id + 1
+    if mode == "clip":
+        return np.minimum(ids, max_id)
+    raise ValueError(f"fold mode {mode!r} not in ('mod', 'clip')")
+
+
 def zipf_stream(n: int, skew: float, seed: int = 0,
-                max_id: int | None = None) -> np.ndarray:
-    """n zipf(skew) item ids (int32, ≥ 1). Matches the paper's generator."""
+                max_id: int | None = None, fold: str = "mod") -> np.ndarray:
+    """n zipf(skew) item ids (int32, ≥ 1). Matches the paper's generator.
+
+    ``fold`` controls how ids beyond ``max_id`` re-enter the range (see
+    :func:`fold_ids`); the default ``'mod'`` preserves the head of the
+    distribution instead of concentrating the tail on ``max_id``.
+    """
     rng = np.random.default_rng(seed)
     out = rng.zipf(skew, size=n)
-    if max_id is not None:
-        out = np.minimum(out, max_id)
+    # rng.zipf returns int64 and at low skew exceeds int32 with real
+    # probability (~11% at skew 1.1) — an uncapped stream must still fold,
+    # or the int32 cast below wraps those ids negative.
+    cap = max_id if max_id is not None else np.iinfo(np.int32).max
+    out = fold_ids(out, cap, fold)
     return out.astype(np.int32)
 
 
@@ -60,7 +88,9 @@ class TokenStream:
     def next(self) -> dict:
         rng = np.random.default_rng((self.state.seed, self.state.step))
         toks = rng.zipf(self.skew, size=(self.batch, self.seq + 1))
-        toks = np.minimum(toks, self.vocab - 1).astype(np.int32)
+        # mod-fold (not clip) so the hot-token telemetry the serving path
+        # sketches is not dominated by a fake heavy hitter at vocab-1
+        toks = fold_ids(toks, self.vocab - 1, "mod").astype(np.int32)
         self.state = DataState(self.state.seed, self.state.step + 1)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 

@@ -10,6 +10,8 @@ example workers — "tenants") and the whole update policy:
     merged(state)               flush view + reduction strategy → one Summary
     top(state, n)               heavy hitters of the merged summary
     estimate(state, queries)    (f̂, lower bound, monitored) per query id
+    snapshot(state)             publish an immutable versioned QuerySnapshot
+                                (the read-side handoff — repro.service)
 
 Consumers (train/sketch.py, launch/serve.py, examples, benchmarks) hold an
 engine + a :class:`SketchState` pytree and never touch vmap/merge plumbing
@@ -25,13 +27,15 @@ from __future__ import annotations
 
 import functools
 import inspect
+import itertools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.spacesaving import (EMPTY, Summary, merge_histogram,
-                                    min_frequency, pad_stream, sort_summary)
+from repro.core.spacesaving import (EMPTY, Summary, bounded_estimates,
+                                    merge_histogram, pad_stream,
+                                    sort_summary)
 from repro.engine.config import EngineConfig
 from repro.engine.reductions import get_reduction
 from repro.engine.state import (SketchState, empty_buffer, flushed_summary,
@@ -70,6 +74,8 @@ class SketchEngine:
         self.absorb_histogram = jax.jit(self._absorb_histogram)
         self.estimate = jax.jit(self._estimate)
         self.top = jax.jit(self._top, static_argnames=("n",))
+        self._snapshot_arrays = jax.jit(self._snapshot_impl)
+        self._versions = itertools.count(1)   # per-engine publish counter
 
     # -- construction -------------------------------------------------------
 
@@ -164,14 +170,34 @@ class SketchEngine:
                             tuple(self.config.axis_names))
 
     def _top(self, state: SketchState, n: int = 10):
+        # n is clamped to [0, k]: slicing past k would silently return k
+        # entries, and a negative n would wrap around.
         s = sort_summary(self._merged(state), ascending=False)
+        n = max(0, min(int(n), s.items.shape[-1]))
         return s.items[:n], s.counts[:n]
 
     def _estimate(self, state: SketchState, queries: jax.Array):
         """(f̂, guaranteed lower bound, monitored?) per query id."""
         s = self._merged(state)
         f, eps, mon = self._query_fn(s.items, s.counts, s.errors, queries)
-        m = min_frequency(s)
-        f_hat = jnp.where(mon, f, m)      # m upper-bounds unmonitored items
-        lower = jnp.where(mon, f - eps, 0)
-        return f_hat, lower, mon
+        return bounded_estimates(s, f, eps, mon)
+
+    # -- snapshot publishing (the read-side handoff, DESIGN.md §7) ----------
+
+    def _snapshot_impl(self, state: SketchState):
+        return self._merged(state), state.n.sum(), state.n
+
+    def snapshot(self, state: SketchState):
+        """Publish an immutable, versioned :class:`QuerySnapshot`.
+
+        Built from the pure flush *view* + the reduction strategy, so the
+        pending buffer is fully visible in the snapshot but ``state`` is
+        NOT flushed or otherwise mutated — ingestion keeps appending to the
+        same buffer while readers query the frozen view. Each publish from
+        this engine gets the next version number (monotonic, host-side).
+        """
+        from repro.service.snapshot import publish
+        summary, n_total, shard_n = self._snapshot_arrays(state)
+        return publish(summary, n_total, shard_n,
+                       version=next(self._versions),
+                       kernel=self.config.resolved_kernel())

@@ -1,0 +1,11 @@
+"""Accuracy-evaluation harness (the paper's experimental section).
+
+``repro.eval.accuracy`` scores the full engine → snapshot → QueryFrontend
+path against the exact oracle over zipf streams; ``python -m
+repro.launch.eval`` is the CLI that writes BENCH_accuracy.json and gates
+the guarantee invariants in CI.
+"""
+from repro.eval.accuracy import (SKEWS, check_record, evaluate_cell,
+                                 run_sweep)
+
+__all__ = ["SKEWS", "check_record", "evaluate_cell", "run_sweep"]

@@ -111,10 +111,23 @@ def combine_match(s_items: jax.Array, c_items: jax.Array,
 
 def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
           block_k: int = 512, block_q: int = 512):
-    """See kernels/ss_query.py. Returns (f̂, ε, monitored) per query."""
+    """See kernels/ss_query.py. Returns (f̂, ε, monitored) per query.
+
+    'auto' off-TPU follows the same policy as ``combine_match``: sorted
+    merge-join at k >= SORTED_MIN_K (the read path probes well-formed
+    distinct-id summaries, so sorted is always bitwise-safe), dense jnp
+    below. Wide count dtypes are routed away from the int32 Pallas kernel.
+    """
+    if impl == "auto" and not _on_tpu():
+        impl = "sorted" if s_items.shape[0] >= SORTED_MIN_K else "jnp"
+    if impl not in ("sorted", "jnp"):
+        wide = any(jnp.dtype(a.dtype).itemsize > 4
+                   for a in (s_counts, s_errors))
+        if wide:
+            impl = "sorted"
     if impl == "sorted":
         return _ref.query_sorted(s_items, s_counts, s_errors, queries)
-    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+    if impl == "jnp":
         return _ref.query_ref(s_items, s_counts, s_errors, queries)
     k, q = s_items.shape[0], queries.shape[0]
     bk = min(block_k, max(8, 1 << (k - 1).bit_length()))

@@ -1,0 +1,84 @@
+"""Accuracy-evaluation CLI — the paper's accuracy tables, reproduced.
+
+Runs the sketch-vs-exact comparison (repro.eval.accuracy) across
+zipf skew × counter budget k × kernel impl, through the production read
+path (SketchEngine → snapshot → QueryFrontend), prints the same
+``name,value,derived`` CSV as benchmarks/run.py, and writes the record to
+``BENCH_accuracy.json``. ``--check`` turns the paper's correctness
+invariants (guaranteed-set recall == 1.0, containment recall == 1.0, zero
+bound violations) into a nonzero exit — the CI accuracy-smoke leg runs it
+at CPU-tractable sizes.
+
+  python -m repro.launch.eval                               # full default sweep
+  python -m repro.launch.eval --n 60000 --k 256 --check     # CI smoke
+  python -m repro.launch.eval --kernels jnp,sorted,pallas   # incl. interpret-mode pallas (slow off-TPU)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.eval.accuracy import SKEWS, check_record, run_sweep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000,
+                    help="stream length per cell")
+    ap.add_argument("--skews", default=",".join(str(s) for s in SKEWS),
+                    help="comma list of zipf skews")
+    ap.add_argument("--k", default="256,1024",
+                    help="comma list of counter budgets")
+    ap.add_argument("--kernels", default="jnp,sorted",
+                    help="comma list of query/merge impls "
+                         "(jnp, sorted, pallas)")
+    ap.add_argument("--k-majority", type=int, default=0,
+                    help="k-majority parameter; 0 → k per cell (the "
+                         "paper's tight budget)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="tenant shards the stream is decomposed over")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-id", type=int, default=10**6)
+    ap.add_argument("--fold", default="mod", choices=("mod", "clip"),
+                    help="tail-fold mode of the zipf generator")
+    ap.add_argument("--out", default="BENCH_accuracy.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every guarantee invariant holds")
+    args = ap.parse_args(argv)
+
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    record = run_sweep(
+        n=args.n,
+        skews=[float(s) for s in args.skews.split(",")],
+        ks=[int(k) for k in args.k.split(",")],
+        impls=[i.strip() for i in args.kernels.split(",")],
+        k_majority=args.k_majority or None,
+        seed=args.seed, tenants=args.tenants, max_id=args.max_id,
+        fold=args.fold, emit=emit)
+
+    Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+    emit("accuracy_json", args.out, "written")
+    s = record["summary"]
+    emit("min_guaranteed_recall", s["min_guaranteed_recall"])
+    emit("min_recall", s["min_recall"])
+    emit("max_are", s["max_are"])
+
+    if args.check:
+        failures = check_record(record)
+        if failures:
+            for f in failures:
+                print(f"CHECK FAILED: {f}", file=sys.stderr)
+            return 1
+        print("check,ok,guaranteed-set + containment + bounds hold",
+              flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

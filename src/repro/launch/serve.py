@@ -3,8 +3,10 @@
 The Space Saving sketch rides along as serving telemetry through the
 SketchEngine: every decoded batch feeds the emitted-token stream into the
 engine's buffered update path (merges amortized over ``buffer_depth``
-chunks); ``--report-every`` asks the engine for the merged heavy hitters
-(paper's ParallelReduction, pending buffer included) — k = O(1) memory
+chunks). ``--report-every`` publishes an immutable QuerySnapshot
+(``engine.snapshot`` — the ingest buffer is NOT flushed; decode keeps
+appending to it) and answers hot-token queries through the QueryFrontend:
+top-n plus the guarantee-split k-majority report — k = O(1) memory
 regardless of traffic.
 
   python -m repro.launch.serve --arch mamba2-130m --smoke \
@@ -22,6 +24,7 @@ import numpy as np
 from repro.configs.registry import get_arch, get_smoke_arch
 from repro.data.synthetic import TokenStream
 from repro.models import model as M
+from repro.service import QueryFrontend
 from repro.sharding.rules import ShardingPlan
 from repro.train import steps as S
 from repro.train import sketch as SK
@@ -35,6 +38,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--report-every", type=int, default=32)
+    ap.add_argument("--k-majority", type=int, default=16,
+                    help="k for the guarantee-split frequent-token report")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -78,6 +83,7 @@ def main(argv=None):
     engine = SK.token_engine(cfg.sketch, groups,
                              chunk=max(1, args.batch // groups))
     sketch = engine.init()
+    frontend = QueryFrontend.for_engine(engine)
     tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     emitted = []
     t0 = time.time()
@@ -87,11 +93,16 @@ def main(argv=None):
         emitted.append(np.asarray(tokens_next))
         tokens = tokens_next[:, None]
         if (i + 1) % args.report_every == 0:
-            top_items, top_counts = engine.top(sketch, n=5)
-            print(f"  [hot-tokens @ {i+1}] "
-                  + ", ".join(f"{int(a)}:{int(c)}" for a, c in
-                              zip(np.asarray(top_items),
-                                  np.asarray(top_counts)) if a >= 0))
+            # publish a frozen view; the decode loop's ingest buffer is
+            # untouched and keeps filling between reports
+            snap = engine.snapshot(sketch)
+            hot = frontend.top_table(snap, n=5)
+            rep = frontend.k_majority_report(snap, args.k_majority)
+            print(f"  [hot-tokens @ {i+1} v{snap.version} n={int(snap.n)}] "
+                  + ", ".join(f"{r['item']}:{r['count']}" for r in hot)
+                  + f" | {args.k_majority}-majority: "
+                  f"{rep.guaranteed_items.size} guaranteed + "
+                  f"{rep.unconfirmed_items.size} candidate")
     dt = time.time() - t0
     print(f"[serve] generated {args.gen}×{args.batch} tokens in {dt:.2f}s "
           f"({args.gen*args.batch/dt:.1f} tok/s)")

@@ -1,0 +1,15 @@
+"""QueryService — the read-side subsystem (DESIGN.md §7).
+
+Decouples queries from ingestion (the QPOPSS split): the engine publishes
+immutable, versioned :class:`QuerySnapshot` views via
+``SketchEngine.snapshot()``, and the :class:`QueryFrontend` plans and
+batches every read — point estimates, top-n, threshold scans, and the
+paper's guarantee-split k-majority report — against them, on the same
+dispatched kernels (jnp / sorted / pallas) as the merge path.
+"""
+from repro.service.frontend import (FrequentItemsReport, QueryFrontend)
+from repro.service.snapshot import QuerySnapshot, publish
+
+__all__ = [
+    "FrequentItemsReport", "QueryFrontend", "QuerySnapshot", "publish",
+]

@@ -1,0 +1,93 @@
+"""QuerySnapshot — the immutable, versioned read view of a sketch.
+
+The write path (SketchEngine) and the read path (QueryFrontend) meet at
+exactly one object: a frozen, flushed-and-merged summary published from a
+:class:`~repro.engine.SketchState` by ``SketchEngine.snapshot()``. The
+QPOPSS argument (DESIGN.md §7): queries must neither block ingestion nor
+force the pending buffer to flush, so the snapshot is built from the pure
+flush *view* — the publisher's state is untouched, its buffer keeps
+filling, and every query against the snapshot sees one consistent
+(summary, n) pair no matter how much the stream advances afterwards.
+
+A snapshot carries its provenance:
+
+  version   monotonically increasing per publishing engine — readers can
+            order reports and detect staleness without comparing arrays
+  tenants   how many tenant shards were merged into the global summary
+  shard_n   (B,) per-tenant item counts at publish time (the paper's block
+            decomposition: which worker saw how much of the stream)
+  kernel    the resolved combine/query kernel impl that built the merge
+
+All array leaves are jax arrays (immutable by construction) and the
+dataclass is frozen, so a snapshot can be shared freely across query
+threads / report ticks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spacesaving import EMPTY, Summary, min_frequency
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySnapshot:
+    """One consistent frozen view: (merged summary, total n, provenance)."""
+
+    summary: Summary        # (k,) merged global summary (pending included)
+    n: jax.Array            # () total valid items ingested at publish time
+    version: int            # per-engine monotonic publish counter
+    tenants: int            # tenant shards merged into this view
+    shard_n: jax.Array      # (B,) per-tenant item counts (provenance)
+    kernel: str             # resolved kernel impl that produced the merge
+
+    @property
+    def k(self) -> int:
+        return self.summary.items.shape[-1]
+
+    @property
+    def min_count(self) -> jax.Array:
+        """m — upper bound on any unmonitored item's true frequency."""
+        return min_frequency(self.summary)
+
+    @property
+    def occupancy(self) -> jax.Array:
+        """Number of live (non-EMPTY) counters in the merged summary."""
+        return (self.summary.items != EMPTY).sum()
+
+    def total(self) -> int:
+        return int(self.n)
+
+    def describe(self) -> dict:
+        """Host-side provenance record (for telemetry / BENCH artifacts)."""
+        return {
+            "version": self.version,
+            "k": self.k,
+            "n": int(self.n),
+            "tenants": self.tenants,
+            "shard_n": [int(x) for x in jnp.atleast_1d(self.shard_n)],
+            "occupancy": int(self.occupancy),
+            "min_count": int(self.min_count),
+            "kernel": self.kernel,
+        }
+
+
+def publish(summary: Summary, n, shard_n, *, version: int,
+            kernel: str) -> QuerySnapshot:
+    """Freeze a merged summary into a QuerySnapshot.
+
+    Called by ``SketchEngine.snapshot()`` (the only producer in-tree); kept
+    as a free function so tests and external publishers can mint snapshots
+    from bare summaries without an engine.
+    """
+    shard_n = jnp.atleast_1d(jnp.asarray(shard_n))
+    return QuerySnapshot(
+        summary=summary,
+        n=jnp.asarray(n),
+        version=int(version),
+        tenants=int(shard_n.shape[0]),
+        shard_n=shard_n,
+        kernel=str(kernel),
+    )

@@ -1,7 +1,44 @@
 """Data pipeline: determinism, O(1) resume, zipf distribution shape."""
 import numpy as np
+import pytest
 
-from repro.data.synthetic import DataState, TokenStream, zipf_stream
+from repro.data.synthetic import DataState, TokenStream, fold_ids, zipf_stream
+
+
+def test_zipf_fold_mod_does_not_pile_tail_on_max_id():
+    # zipf(1.1) has heavy tail mass beyond a small cap: P(X > 1000) ≈ 0.5.
+    # 'clip' dumps all of it on max_id (a fake heavy hitter); 'mod' spreads
+    # it across the range, leaving every individual id's probability small.
+    max_id = 1000
+    clip = zipf_stream(200_000, 1.1, seed=0, max_id=max_id, fold="clip")
+    mod = zipf_stream(200_000, 1.1, seed=0, max_id=max_id, fold="mod")
+    assert (clip == max_id).mean() > 0.2          # the distortion being fixed
+    assert (mod == max_id).mean() < 0.01          # gone under mod
+    assert mod.min() >= 1 and mod.max() <= max_id
+    # the head of the distribution is preserved: P(1) ≈ 1/ζ(1.1) ≈ 0.094
+    # plus only ~tail/max_id of fold-in mass
+    p1 = (mod == 1).mean()
+    assert 0.06 < p1 < 0.14, p1
+    # head rank order intact: f(1) > f(2) > f(3) by a clear margin
+    c = [(mod == i).sum() for i in (1, 2, 3)]
+    assert c[0] > c[1] > c[2]
+
+
+def test_zipf_uncapped_stays_positive_int32():
+    # without max_id, int64 zipf draws beyond 2^31 must fold, not wrap
+    s = zipf_stream(100_000, 1.1, seed=0)
+    assert s.dtype == np.int32
+    assert s.min() >= 1
+
+
+def test_fold_ids_modes():
+    ids = np.array([1, 5, 6, 7, 13])
+    np.testing.assert_array_equal(fold_ids(ids, 6, "mod"),
+                                  [1, 5, 6, 1, 1])
+    np.testing.assert_array_equal(fold_ids(ids, 6, "clip"),
+                                  [1, 5, 6, 6, 6])
+    with pytest.raises(ValueError):
+        fold_ids(ids, 6, "wrap")
 
 
 def test_zipf_matches_paper_distribution():
