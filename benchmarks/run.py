@@ -3,26 +3,64 @@
 Prints ``name,value,derived`` CSV. Paper-accuracy/scaling benches run the
 real algorithms at CPU-scaled sizes; the ``sketch`` section additionally
 writes BENCH_sketch.json (updates/sec for the scan / chunked /
-engine-buffered paths + COMBINE latency vs k) so the sketch subsystem's
-perf trajectory is tracked across PRs; the roofline section summarizes the
-dry-run artifacts (results/dryrun) if present.
+engine-buffered paths + COMBINE latency vs k, plus the per-strategy
+reduction latencies folded in from the scaling sweep); the ``scaling``
+section runs the StreamRuntime scaling study (repro.launch.scale, in a
+subprocess so it can force multiple host devices) and writes
+BENCH_scaling.json; the roofline section summarizes the dry-run artifacts
+(results/dryrun) if present.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig2,sketch,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,sketch,scaling,...]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 from pathlib import Path
+
+
+def run_scaling(emit, out_path: str) -> dict | None:
+    """The paper's scaling study via ``repro.launch.scale --quick``.
+
+    Runs in a subprocess because the sweep needs several forced host
+    devices and XLA fixes the device count when the parent's backend
+    initializes; the CLI bootstraps XLA_FLAGS itself.
+    """
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.scale", "--quick",
+         "--out", out_path],
+        capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        print(f"scaling,failed,{r.stderr[-500:]!r}", file=sys.stderr)
+        return None
+    record = json.loads(Path(out_path).read_text())
+    for cell in record["cells"]:
+        if cell["mode"] != "strong":
+            continue
+        emit(f"scaling_{cell['strategy']}_{cell['impl']}_p{cell['p']}",
+             f"{cell['total_s']:.4e}",
+             f"speedup={cell['speedup']:.2f};"
+             f"efficiency={cell['efficiency']:.3f}")
+    emit("scaling_json", out_path, "written")
+    return record
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,tab34,fig56,sketch,roofline")
+                    help="comma list: fig1,fig2,tab34,fig56,sketch,"
+                         "scaling,roofline")
     ap.add_argument("--sketch-json", default="BENCH_sketch.json",
                     help="where the sketch-bench record is written")
+    ap.add_argument("--scaling-json", default="BENCH_scaling.json",
+                    help="where the scaling-sweep record is written")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -44,8 +82,24 @@ def main() -> None:
             continue
         fn(emit)
 
+    scaling_record = None
+    scaling_attempted = only is None or "scaling" in only
+    if scaling_attempted:
+        scaling_record = run_scaling(emit, args.scaling_json)
+
     if only is None or "sketch" in only:
         record = P.bench_sketch(emit)
+        # keep BENCH_sketch.json and BENCH_scaling.json consistent: the
+        # per-strategy reduction latencies ride alongside combine_latency_s.
+        # Fold from the on-disk record only when the scaling section was
+        # deliberately skipped — after a FAILED scaling run, silently
+        # pairing this run's numbers with a stale file would misrecord.
+        if (scaling_record is None and not scaling_attempted
+                and Path(args.scaling_json).exists()):
+            scaling_record = json.loads(Path(args.scaling_json).read_text())
+        if scaling_record is not None:
+            record["reduction_latency_s"] = \
+                scaling_record["reduction_latency_s"]
         Path(args.sketch_json).write_text(json.dumps(record, indent=2) + "\n")
         print(f"sketch_json,{args.sketch_json},written", flush=True)
 

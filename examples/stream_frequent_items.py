@@ -1,49 +1,55 @@
-"""Streaming frequent items through the SketchEngine.
+"""Streaming frequent items through the StreamRuntime.
 
-Eight tenant sketches ingest the stream through the engine's buffered
-(deferred-merge) update path — appends are cheap, the vectorized merge runs
-once per ``buffer_depth`` chunks (QPOPSS-style amortization).  Reports go
-through the read-side QueryService: the engine publishes immutable
-versioned snapshots (ingest buffer included, never flushed), and the
-QueryFrontend answers top-n / point / k-majority queries against them on
-the same dispatched kernels.
+The runtime owns the whole distributed ingestion path (DESIGN.md §8): the
+stream is block-decomposed over shards × lanes workers (the paper's
+MPI-rank × OpenMP-thread structure — on one device the shard level
+collapses and the lanes are vmapped), host blocks are staged onto devices
+double-buffered (`feed`: the transfer of block i+1 overlaps the ingestion
+of block i), appends are cheap and the vectorized merge runs once per
+``buffer_depth`` chunks. Reports go through the read-side QueryService:
+the runtime publishes immutable versioned snapshots with per-worker
+provenance, and its QueryFrontend answers top-n / point / k-majority
+queries on the same dispatched kernels.
 
   PYTHONPATH=src python examples/stream_frequent_items.py
 """
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import zipf_stream
-from repro.engine import EngineConfig, SketchEngine
-from repro.service import QueryFrontend
+from repro.engine import EngineConfig
+from repro.runtime import RuntimeConfig, StreamRuntime
 
 K = 512
-WORKERS = 8          # tenants (in production: one per data-parallel group)
+LANES = 8            # vmapped sketch lanes per shard (the OpenMP level)
 CHUNK = 4096
 DEPTH = 4            # chunks buffered per deferred merge
 
-engine = SketchEngine(EngineConfig(
-    k=K, tenants=WORKERS, chunk=CHUNK, buffer_depth=DEPTH,
-    reduction="hierarchical"))
-state = engine.init()
-frontend = QueryFrontend.for_engine(engine)
+runtime = StreamRuntime(RuntimeConfig(
+    engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK, buffer_depth=DEPTH,
+                        reduction="hierarchical"),
+    shards=None))    # None → shard over every host device
+state = runtime.init()
+frontend = runtime.frontend()
 
-print(f"streaming 40 chunks × {WORKERS} workers × {CHUNK} items "
+print(f"streaming 40 blocks × {runtime.workers} workers "
+      f"({runtime.shards} shard(s) × {LANES} lanes) × {CHUNK} items "
       f"(merges deferred {DEPTH}×)")
-for step in range(40):
-    block = zipf_stream(WORKERS * CHUNK, 1.1, seed=step, max_id=10**6)
-    state = engine.update(state, jnp.asarray(block).reshape(WORKERS, CHUNK))
-    if (step + 1) % 10 == 0:
-        # publish a frozen versioned view (pending chunks included; the
-        # ingest buffer keeps filling) and query it via the frontend
-        snap = engine.snapshot(state)
-        print(f"  after {(step+1)*WORKERS*CHUNK:9,d} items "
-              f"(snapshot v{snap.version}), top-3:",
-              [(r["item"], r["count"]) for r in frontend.top_table(snap, 3)])
+for step in range(4):
+    # 10 host blocks per leg, staged ahead of compute (double-buffered)
+    blocks = (zipf_stream(runtime.workers * CHUNK, 1.1, seed=10 * step + i,
+                          max_id=10**6)
+              for i in range(10))
+    state = runtime.feed(state, blocks)
+    # publish a frozen versioned view (pending chunks included; the
+    # ingest buffer keeps filling) and query it via the frontend
+    snap = runtime.snapshot(state)
+    print(f"  after {int(snap.n):9,d} items (snapshot v{snap.version}), "
+          f"top-3:",
+          [(r["item"], r["count"]) for r in frontend.top_table(snap, 3)])
 
 # frequency queries + the paper's guarantee-split k-majority report,
 # all against one immutable snapshot
-snap = engine.snapshot(state)
+snap = runtime.snapshot(state)
 queries = [1, 2, 3, 50, 999_999]
 f_hat, lower, monitored = frontend.estimate(snap, queries)
 print("\nqueries (item -> f̂ [lower bound] monitored?):")

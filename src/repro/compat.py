@@ -22,6 +22,23 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication/varying-axes check disabled.
+
+    The check rejects ``lax.cond`` bodies whose branches mix replicated
+    constants with device-varying values (e.g. the engine's buffered-update
+    auto-flush), even though the program is well-defined per device. The
+    flag was renamed across jax versions: ``check_rep`` (≤0.5) →
+    ``check_vma`` (current).
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
 def make_mesh(shape, axes):
     """``jax.make_mesh`` with explicit-Auto axis types where supported."""
     if AxisType is None:

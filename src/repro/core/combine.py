@@ -70,18 +70,28 @@ def _pad_pow2(stacked: Summary) -> Summary:
 def reduce_summaries(stacked: Summary, *, match_fn=None) -> Summary:
     """Reduce a stack of P summaries (leading axis) to one, log₂(P) rounds.
 
-    Each round pairs the first half with the second half and merges with a
-    vmapped COMBINE — the on-device analogue of the paper's ParallelReduction
-    when the summaries already live in one address space (e.g. after an
-    all_gather, or the per-thread summaries of the OpenMP version).
+    Each round merges ADJACENT pairs (2i, 2i+1) with a vmapped COMBINE — the
+    on-device analogue of the paper's ParallelReduction when the summaries
+    already live in one address space (e.g. after an all_gather, or the
+    per-thread summaries of the OpenMP version).
     P is padded to a power of two with empty summaries (the identity).
     ``match_fn`` selects the combine-match kernel for every round.
+
+    The adjacent pairing is load-bearing: it is the exact COMBINE tree that
+    recursive doubling (``butterfly_combine``) evaluates on rank 0, and it
+    decomposes into per-block subtrees — reducing a (p·L)-stack equals
+    reducing each contiguous L-block locally and then tree-combining the p
+    block results.  This is what makes a sharded StreamRuntime snapshot
+    (per-shard lane reduce, then any mesh strategy) bitwise-identical to
+    the single-host reduction over all p·L tenants (tests/test_runtime.py).
     """
     stacked = _pad_pow2(stacked)
     cur = stacked
     while cur.items.shape[0] > 1:
         half = cur.items.shape[0] // 2
-        s1 = jax.tree.map(lambda a: a[:half], cur)
-        s2 = jax.tree.map(lambda a: a[half:], cur)
+        pairs = jax.tree.map(
+            lambda a: a.reshape((half, 2) + a.shape[1:]), cur)
+        s1 = jax.tree.map(lambda a: a[:, 0], pairs)
+        s2 = jax.tree.map(lambda a: a[:, 1], pairs)
         cur = jax.vmap(lambda a, b: combine(a, b, match_fn=match_fn))(s1, s2)
     return jax.tree.map(lambda a: a[0], cur)

@@ -1,4 +1,4 @@
-"""Parallel Space Saving (paper's Algorithm 1) on JAX meshes.
+"""Parallel Space Saving (paper's Algorithm 1) on JAX meshes — primitives.
 
 Three reduction strategies over device meshes, mirroring the paper's study:
 
@@ -14,11 +14,14 @@ Three reduction strategies over device meshes, mirroring the paper's study:
     cross-pod round instead of log₂(p); this is the configuration the paper
     shows wins at 512 cores.
 
-Plus the single-host entry point :func:`parallel_spacesaving` (Algorithm 1
-verbatim: block decomposition → local Space Saving → reduction → prune),
-which is what benchmarks and CPU tests drive; the distributed variants are
-exercised by the sketch integration in train/serve steps and by shard_map
-tests.
+All three evaluate the SAME canonical COMBINE tree on rank 0 (adjacent
+pairing, see ``reduce_summaries``), so any strategy over any power-of-two
+topology produces the bitwise-identical global summary.
+
+This module holds the *primitives*; the consumer-facing entry points
+(:func:`parallel_spacesaving`, :func:`frequent_items`) are owned by the
+StreamRuntime subsystem (``repro.runtime``) and re-exported here for
+backward compatibility — new code should drive ``repro.runtime`` directly.
 """
 from __future__ import annotations
 
@@ -33,6 +36,27 @@ from repro import compat
 from repro.core.combine import combine, reduce_summaries
 from repro.core.spacesaving import (Summary, init_summary, pad_stream, prune,
                                     spacesaving_chunked)
+
+
+# ---------------------------------------------------------------------------
+# Block decomposition (lines 1–2 of Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def block_decompose(stream: jax.Array, workers: int,
+                    multiple: int = 1) -> jax.Array:
+    """Split a (N,) stream into (workers, per) EMPTY-padded blocks.
+
+    ``per`` is ⌈N/workers⌉ rounded up to ``multiple`` (a chunk size), so
+    every worker block feeds a chunked update path without further padding.
+    This is THE canonical decomposition: the single-host engine's tenants,
+    the StreamRuntime's shard×lane workers, and the paper's MPI ranks all
+    index the same blocks, which is what makes their results comparable.
+    """
+    stream = jnp.asarray(stream)
+    n = stream.shape[-1]
+    per = -(-n // workers)
+    per = -(-per // multiple) * multiple
+    return pad_stream(stream, per * workers).reshape(workers, per)
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +99,25 @@ def allgather_combine(s: Summary, axis_names, *, match_fn=None) -> Summary:
     return reduce_summaries(stacked, match_fn=match_fn)
 
 
+def _require_bound_axis(axis_name: str, role: str) -> int:
+    """Resolve a mesh axis size, turning an unbound name into a ValueError.
+
+    Inside ``shard_map`` an unknown axis name surfaces as an opaque
+    NameError/KeyError from deep in the tracing machinery; callers that
+    configure reductions from user input (RuntimeConfig, CLI flags) want
+    the misconfiguration named instead.
+    """
+    try:
+        return compat.axis_size(axis_name)
+    except (NameError, KeyError):     # the tracers' unbound-axis errors
+        raise ValueError(
+            f"hierarchical_combine: {role} axis {axis_name!r} is not bound "
+            f"in the current mesh. Pass an axis that exists in the "
+            f"surrounding shard_map mesh, or outer_axis=None for a "
+            f"single-pod reduction (equivalent to butterfly_combine over "
+            f"the intra-pod axis).") from None
+
+
 def hierarchical_combine(s: Summary, inner_axis: str,
                          outer_axis: str | None, *, match_fn=None) -> Summary:
     """Two-level reduction: intra-pod butterfly, then cross-pod butterfly.
@@ -82,7 +125,14 @@ def hierarchical_combine(s: Summary, inner_axis: str,
     The paper's hybrid MPI/OpenMP finding, mesh-native: communication over
     the slow (cross-pod / DCN) axis drops from log₂(p_total) rounds to
     log₂(n_pods) rounds, with the fast ICI axis absorbing the rest.
+
+    Both axes are validated up front: a mesh that lacks the cross-pod axis
+    raises a ValueError naming the missing axis (instead of an opaque
+    failure inside shard_map) — single-pod callers pass ``outer_axis=None``.
     """
+    _require_bound_axis(inner_axis, "intra-pod")
+    if outer_axis is not None:
+        _require_bound_axis(outer_axis, "cross-pod")
     s = butterfly_combine(s, inner_axis, match_fn=match_fn)
     if outer_axis is not None:
         s = butterfly_combine(s, outer_axis, match_fn=match_fn)
@@ -94,7 +144,7 @@ def hierarchical_combine(s: Summary, inner_axis: str,
 
 
 # ---------------------------------------------------------------------------
-# Algorithm 1 — single-program entry point (vmap over logical workers)
+# Algorithm 1 — single-program local pass (vmap over logical workers)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("p", "k", "chunk_size"))
@@ -107,31 +157,37 @@ def local_summaries(stream: jax.Array, *, p: int, k: int,
     the leading dim over the ``data`` axis makes this the exact distributed
     program of the paper; on one device it is a vmap.
     """
-    n = stream.shape[-1]
-    per = -(-n // p)
-    per = -(-per // chunk_size) * chunk_size  # round up to chunk multiple
-    stream = pad_stream(stream, per * p)
-    blocks = stream.reshape(p, per)
+    blocks = block_decompose(stream, p, chunk_size)
     init = init_summary(k)
     return jax.vmap(
         lambda b: spacesaving_chunked(init, b, chunk_size=chunk_size))(blocks)
 
 
 def parallel_spacesaving(stream: jax.Array, *, k: int, p: int,
-                         chunk_size: int = 1024, match_fn=None) -> Summary:
-    """Algorithm 1: local Space Saving per block, then ParallelReduction."""
-    stacked = local_summaries(stream, p=p, k=k, chunk_size=chunk_size)
-    return reduce_summaries(stacked, match_fn=match_fn)
+                         chunk_size: int = 1024,
+                         kernel: str = "auto") -> Summary:
+    """Algorithm 1: local Space Saving per block, then ParallelReduction.
+
+    Thin wrapper over the StreamRuntime one-shot API
+    (``repro.runtime.parallel_spacesaving``) — the runtime owns end-to-end
+    ingestion now; this name stays importable from ``repro.core``. The
+    merge kernel is selected by name (``kernel=``, resolved like
+    ``EngineConfig.kernel``) — the former ``match_fn`` callable keyword is
+    gone with the move to engine-managed dispatch.
+    """
+    from repro.runtime import parallel_spacesaving as _run
+    return _run(stream, k=k, p=p, chunk_size=chunk_size, kernel=kernel)
 
 
-def frequent_items(stream: jax.Array, *, k_majority: int, counters: int | None = None,
-                   p: int = 1, chunk_size: int = 1024):
+def frequent_items(stream: jax.Array, *, k_majority: int,
+                   counters: int | None = None, p: int = 1,
+                   chunk_size: int = 1024):
     """End-to-end k-majority query: returns (items, f̂, candidate, guaranteed).
 
     ``counters`` defaults to the theory-minimal k (one counter per possible
-    heavy hitter); more counters tighten the ε bounds.
+    heavy hitter); more counters tighten the ε bounds. Delegates to the
+    StreamRuntime one-shot API (``repro.runtime.frequent_items``).
     """
-    counters = counters or k_majority
-    summary = parallel_spacesaving(stream, k=counters, p=p, chunk_size=chunk_size)
-    n = int(stream.shape[-1])
-    return prune(summary, n, k_majority)
+    from repro.runtime import frequent_items as _run
+    return _run(stream, k_majority=k_majority, counters=counters, p=p,
+                chunk_size=chunk_size)

@@ -7,9 +7,13 @@ Every strategy has the signature
 
 where ``stacked`` carries the tenant dim on axis 0 (each leaf is (B, k)) and
 ``axis_names`` are the mesh axes to reduce over *in addition to* the local
-tenant dim (empty outside shard_map — then every strategy degrades to the
-on-device tree reduction, which pjit lowers to collectives when the tenant
-dim is sharded). ``match_fn`` is the engine-resolved combine-match kernel
+tenant dim, listed INNERMOST (fastest-varying / intra-pod) first — empty
+outside shard_map, where every strategy degrades to the on-device tree
+reduction (which pjit lowers to collectives when the tenant dim is
+sharded). With that convention every strategy evaluates the same canonical
+adjacent-pair COMBINE tree over the mesh-major rank order, which is what
+keeps them bitwise-interchangeable (``_allgather`` gathers outermost-first
+for the same reason). ``match_fn`` is the engine-resolved combine-match kernel
 (``kernels.ops.combine_match`` contract) driving every COMBINE the strategy
 performs; strategies registered without the keyword still work — the engine
 only passes it when the callable accepts it.
@@ -78,7 +82,11 @@ def _butterfly(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
 def _allgather(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
     s = reduce_summaries(stacked, match_fn=match_fn)
     if axis_names:
-        s = allgather_combine(s, tuple(axis_names), match_fn=match_fn)
+        # all_gather stacks one dim per axis in the order given; reversing
+        # the innermost-first convention gathers outermost-first, i.e. the
+        # mesh-major global rank order the canonical COMBINE tree expects
+        s = allgather_combine(s, tuple(reversed(axis_names)),
+                              match_fn=match_fn)
     return s
 
 

@@ -20,8 +20,20 @@ def make_mesh_shape(shape, axes):
     return make_mesh(shape, axes)
 
 
-def make_host_mesh(n_data: int = 1, n_model: int = 1):
-    """Small mesh over however many (host/CPU) devices exist."""
+def make_host_mesh(n_data: int | None = 1, n_model: int = 1):
+    """Small mesh over however many (host/CPU) devices exist.
+
+    ``n_data=None`` auto-sizes the data axis to all host devices (divided
+    by ``n_model``) — what StreamRuntime defaults to. Requesting more
+    devices than exist raises a ValueError naming both counts.
+    """
     n = len(jax.devices())
-    assert n_data * n_model <= n, (n_data, n_model, n)
+    if n_data is None:
+        n_data = max(1, n // n_model)
+    if n_data * n_model > n:
+        raise ValueError(
+            f"make_host_mesh: requested {n_data}×{n_model} = "
+            f"{n_data * n_model} devices but only {n} host device(s) are "
+            f"available; lower n_data/n_model or force more via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
     return make_mesh((n_data, n_model), ("data", "model"))

@@ -1,11 +1,12 @@
 """Serving driver: batched prefill → decode loop with hot-token telemetry.
 
 The Space Saving sketch rides along as serving telemetry through the
-SketchEngine: every decoded batch feeds the emitted-token stream into the
-engine's buffered update path (merges amortized over ``buffer_depth``
-chunks). ``--report-every`` publishes an immutable QuerySnapshot
-(``engine.snapshot`` — the ingest buffer is NOT flushed; decode keeps
-appending to it) and answers hot-token queries through the QueryFrontend:
+StreamRuntime (the one consumer-facing ingestion surface): the decode step
+feeds the emitted-token stream into the engine's buffered update path
+(merges amortized over ``buffer_depth`` chunks). ``--report-every``
+publishes an immutable QuerySnapshot (``runtime.snapshot`` — the ingest
+buffer is NOT flushed; decode keeps appending to it) and answers hot-token
+queries through the runtime's QueryFrontend:
 top-n plus the guarantee-split k-majority report — k = O(1) memory
 regardless of traffic.
 
@@ -24,7 +25,6 @@ import numpy as np
 from repro.configs.registry import get_arch, get_smoke_arch
 from repro.data.synthetic import TokenStream
 from repro.models import model as M
-from repro.service import QueryFrontend
 from repro.sharding.rules import ShardingPlan
 from repro.train import steps as S
 from repro.train import sketch as SK
@@ -78,12 +78,14 @@ def main(argv=None):
 
     # same group count as make_serve_step's engine (1 on this null plan);
     # chunk = the decode payload (B tokens/step) so buffer slots hold real
-    # tokens, not EMPTY padding up to the training chunk size
+    # tokens, not EMPTY padding up to the training chunk size. The runtime
+    # owns init/snapshot/frontend — the decode step keeps threading the
+    # state through its own engine (any engine serves any state).
     groups = S.sketch_groups(plan)
-    engine = SK.token_engine(cfg.sketch, groups,
-                             chunk=max(1, args.batch // groups))
-    sketch = engine.init()
-    frontend = QueryFrontend.for_engine(engine)
+    runtime = SK.token_runtime(cfg.sketch, groups,
+                               chunk=max(1, args.batch // groups))
+    sketch = runtime.init()
+    frontend = runtime.frontend()
     tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     emitted = []
     t0 = time.time()
@@ -95,7 +97,7 @@ def main(argv=None):
         if (i + 1) % args.report_every == 0:
             # publish a frozen view; the decode loop's ingest buffer is
             # untouched and keeps filling between reports
-            snap = engine.snapshot(sketch)
+            snap = runtime.snapshot(sketch)
             hot = frontend.top_table(snap, n=5)
             rep = frontend.k_majority_report(snap, args.k_majority)
             print(f"  [hot-tokens @ {i+1} v{snap.version} n={int(snap.n)}] "

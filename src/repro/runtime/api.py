@@ -1,0 +1,57 @@
+"""One-shot functional API over StreamRuntime (Algorithm 1 verbatim).
+
+``parallel_spacesaving`` is the paper's end-to-end program — block
+decomposition, per-worker Space Saving, ParallelReduction — as a single
+call. It runs on a cached single-shard runtime whose ``p`` vmapped lanes
+are the logical workers (``buffer_depth=1`` recovers the unbuffered
+per-chunk merge semantics of the original formulation); under pjit with
+the lane dim sharded it is the distributed program. ``frequent_items``
+adds the PRUNED k-majority step.
+
+These are also re-exported from ``repro.core`` for backward compatibility.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spacesaving import Summary, prune
+from repro.engine import EngineConfig
+from repro.runtime.config import RuntimeConfig
+from repro.runtime.runtime import StreamRuntime
+
+
+@functools.lru_cache(maxsize=64)
+def _oneshot_runtime(k: int, p: int, chunk_size: int,
+                     kernel: str) -> StreamRuntime:
+    return StreamRuntime(RuntimeConfig(
+        engine=EngineConfig(k=k, tenants=p, chunk=chunk_size,
+                            buffer_depth=1, reduction="local",
+                            kernel=kernel),
+        shards=1))
+
+
+def parallel_spacesaving(stream: jax.Array, *, k: int, p: int,
+                         chunk_size: int = 1024,
+                         kernel: str = "auto") -> Summary:
+    """Algorithm 1: local Space Saving per block, then ParallelReduction."""
+    rt = _oneshot_runtime(int(k), int(p), int(chunk_size), kernel)
+    state = rt.ingest(rt.init(), stream)
+    return rt.merged(state)
+
+
+def frequent_items(stream: jax.Array, *, k_majority: int,
+                   counters: int | None = None, p: int = 1,
+                   chunk_size: int = 1024):
+    """End-to-end k-majority query: (items, f̂, candidate, guaranteed).
+
+    ``counters`` defaults to the theory-minimal k (one counter per possible
+    heavy hitter); more counters tighten the ε bounds.
+    """
+    counters = counters or k_majority
+    summary = parallel_spacesaving(stream, k=counters, p=p,
+                                   chunk_size=chunk_size)
+    n = int(jnp.asarray(stream).shape[-1])
+    return prune(summary, n, k_majority)

@@ -1,0 +1,58 @@
+"""RuntimeConfig — topology + reduction policy around a wrapped EngineConfig.
+
+The runtime owns everything the engine deliberately does not: how many mesh
+shards ingest concurrently (the paper's MPI-rank level), how those shards
+are grouped into pods (the hybrid MPI/OpenMP topology), which reduction
+strategy stitches shard summaries into the global one, and how host blocks
+are staged onto devices. The wrapped :class:`~repro.engine.EngineConfig`
+keeps describing ONE shard's policy — its ``tenants`` field is the number
+of vmapped lanes per shard (the OpenMP-thread level), so the total worker
+count of a runtime is ``shards × lanes``.
+
+Frozen and hashable, like EngineConfig, so runtimes can be cached and
+captured by jitted closures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.engine.config import EngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Static configuration of one :class:`~repro.runtime.StreamRuntime`."""
+
+    engine: EngineConfig = EngineConfig()
+    shards: int | None = None   # p — data-axis shards; None → all host devices
+    pods: int = 1               # outer mesh axis (>1 → ("pod","data") mesh)
+    reduction: str | None = None   # cross-shard strategy; None → engine's
+    feed_depth: int = 2         # host→device staging slots (double-buffered)
+
+    def __post_init__(self):
+        if self.shards is not None and self.shards < 1:
+            raise ValueError(f"shards must be >= 1 or None, got {self.shards}")
+        if self.pods < 1:
+            raise ValueError(f"pods must be >= 1, got {self.pods}")
+        if (self.shards is not None and self.pods > 1
+                and self.shards % self.pods):
+            raise ValueError(
+                f"pods ({self.pods}) must divide shards ({self.shards})")
+        if self.feed_depth < 1:
+            raise ValueError(
+                f"feed_depth must be >= 1, got {self.feed_depth}")
+        if self.reduction is not None:
+            from repro.engine.reductions import reduction_names
+            if self.reduction not in reduction_names():
+                raise ValueError(
+                    f"reduction {self.reduction!r} not registered; have "
+                    f"{sorted(reduction_names())}")
+
+    @property
+    def lanes(self) -> int:
+        """Vmapped sketch lanes per shard (the OpenMP-thread level)."""
+        return self.engine.tenants
+
+    def resolved_reduction(self) -> str:
+        return self.reduction if self.reduction is not None \
+            else self.engine.reduction

@@ -1,0 +1,61 @@
+"""DeviceFeed — async double-buffered host→device staging.
+
+``jax.device_put`` returns immediately (the transfer is dispatched
+asynchronously), so keeping ``depth`` blocks in flight lets the transfer of
+block i+1 overlap the ingestion compute of block i — the classic
+double-buffered pipeline (depth=2). The feed yields device arrays in input
+order; with a sharding attached, each worker row lands directly on its
+owning device, so the block decomposition *is* the scatter.
+
+The pipeline only helps when the consumer dispatches its compute
+asynchronously too (jitted ingest calls do); on a single-process CPU
+backend it degrades gracefully to a plain prefetch queue.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterable, Iterator
+
+import jax
+import numpy as np
+
+from repro.core.spacesaving import EMPTY
+
+
+def host_blocks(stream: np.ndarray, workers: int,
+                multiple: int = 1) -> np.ndarray:
+    """Host-side mirror of :func:`repro.core.parallel.block_decompose`.
+
+    Pads with EMPTY and reshapes to (workers, per) with numpy so staging
+    never round-trips through a device: decompose on host, then one sharded
+    ``device_put`` scatters each worker row to its device.
+    """
+    stream = np.asarray(stream)
+    n = stream.shape[-1]
+    per = -(-n // workers)
+    per = -(-per // multiple) * multiple
+    pad = per * workers - n
+    if pad:
+        stream = np.concatenate(
+            [stream, np.full((pad,), EMPTY, stream.dtype)])
+    return stream.reshape(workers, per)
+
+
+class DeviceFeed:
+    """Iterate host blocks as device arrays, ``depth`` transfers in flight."""
+
+    def __init__(self, blocks: Iterable, *, sharding=None, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._blocks = blocks
+        self._sharding = sharding
+        self._depth = depth
+
+    def __iter__(self) -> Iterator[jax.Array]:
+        queue: collections.deque = collections.deque()
+        for block in self._blocks:
+            queue.append(jax.device_put(block, self._sharding))
+            if len(queue) >= self._depth:
+                yield queue.popleft()
+        while queue:
+            yield queue.popleft()

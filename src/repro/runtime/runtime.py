@@ -1,0 +1,263 @@
+"""StreamRuntime — the sharded two-level ingestion runtime.
+
+One object owns end-to-end distributed sketching and is the only way
+consumers drive it (DESIGN.md §8):
+
+    init()                 sharded SketchState over shards × lanes workers
+    decompose(stream)      the canonical (W, per) block decomposition
+    ingest(state, stream)  block-decompose + per-shard buffered engine ingest
+    feed(state, blocks)    double-buffered host→device ingestion loop
+    merged(state)          one global Summary via the reduction strategy
+    snapshot(state)        immutable versioned QuerySnapshot with per-worker
+                           provenance (the QueryService handoff)
+    frontend()             a QueryFrontend on the runtime's resolved kernel
+
+Two-level structure, mapped onto the paper's hybrid MPI/OpenMP design:
+
+  * shard level — the global stream is block-decomposed over the ``data``
+    mesh axis via ``shard_map`` (optionally ``("pod", "data")`` for the
+    two-level topology): each shard is an MPI rank with its own
+    SketchEngine state slice and pending-chunk buffer.
+  * lane level — inside each shard the engine runs ``lanes`` vmapped
+    sketches (EngineConfig.tenants): the OpenMP threads of the paper,
+    merged on-device by the local COMBINE tree before any communication.
+
+Global snapshots run the engine's reduction strategy (``butterfly`` /
+``allgather`` / ``hierarchical`` from the reduction registry) across the
+mesh axes. Because every strategy evaluates the same canonical adjacent-pair
+COMBINE tree (see ``reduce_summaries``), a sharded runtime snapshot is
+bitwise-identical to a single-host SketchEngine over the same shards×lanes
+block decomposition — tested across strategies × p × kernel impls in
+tests/test_runtime.py and tests/test_sharding_dist.py.
+
+The shard body never returns the replicated ``fill`` scalar through
+``shard_map`` (its evolution is deterministic: ``(fill + chunks) % depth``,
+computed outside), so every shard output is sharded and no replication
+checks are involved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map_unchecked
+from repro.core.parallel import block_decompose
+from repro.core.spacesaving import Summary
+from repro.engine import SketchEngine
+from repro.engine.state import SketchState
+from repro.runtime.config import RuntimeConfig
+from repro.runtime.feed import DeviceFeed, host_blocks
+
+
+class StreamRuntime:
+    """Sharded two-level ingestion: shard_map ranks × vmapped engine lanes."""
+
+    def __init__(self, config: RuntimeConfig):
+        self.config = config
+        self.shards = (config.shards if config.shards is not None
+                       else len(jax.devices()))
+        if config.pods > 1 and self.shards % config.pods:
+            raise ValueError(
+                f"pods ({config.pods}) must divide shards ({self.shards}, "
+                f"auto-sized to the host device count)")
+        n_dev = len(jax.devices())
+        if self.shards > n_dev:
+            raise ValueError(
+                f"StreamRuntime: requested {self.shards} shards but only "
+                f"{n_dev} host device(s) are available; lower shards or "
+                f"force more via "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+
+        if self.shards == 1:
+            # single-shard fast path: no mesh, no shard_map — the engine's
+            # vmapped lanes are the whole worker set and every reduction
+            # strategy degrades to the local COMBINE tree.
+            self.mesh = None
+            self._axes = ()
+            self._dim0 = None
+        elif config.pods > 1:
+            from repro.launch.mesh import make_mesh_shape
+            self.mesh = make_mesh_shape(
+                (config.pods, self.shards // config.pods), ("pod", "data"))
+            # innermost (intra-pod) axis first — the reduction registry's
+            # axis_names convention; dim-0 sharding is mesh-major.
+            self._axes = ("data", "pod")
+            self._dim0 = ("pod", "data")
+        else:
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = make_host_mesh(n_data=self.shards)
+            self._axes = ("data",)
+            self._dim0 = ("data",)
+
+        self.engine = SketchEngine(dataclasses.replace(
+            config.engine,
+            reduction=config.resolved_reduction(),
+            axis_names=self._axes))
+        self._versions = itertools.count(1)
+        self._build_programs()
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def lanes(self) -> int:
+        return self.config.lanes
+
+    @property
+    def workers(self) -> int:
+        """Total logical workers W = shards × lanes."""
+        return self.shards * self.lanes
+
+    def decompose(self, stream: jax.Array) -> jax.Array:
+        """The canonical (W, per) block decomposition of a global stream."""
+        return block_decompose(stream, self.workers, self.config.engine.chunk)
+
+    # -- program construction ------------------------------------------------
+
+    def _build_programs(self):
+        eng = self.engine
+
+        if self.shards == 1:
+            self._ingest_blocks_fn = jax.jit(eng._ingest)
+            self._merged_fn = jax.jit(eng._merged)
+            return
+
+        spec1 = P(self._dim0)          # dim-0 over the data (or pod×data) axes
+        state_specs = (Summary(spec1, spec1, spec1), spec1, spec1)
+
+        def shard_ingest(summary, buffer, n, fill, blocks):
+            # reassemble one shard's engine state (lanes tenants) from the
+            # sharded leaves + the replicated fill scalar
+            st = SketchState(summary=summary, buffer=buffer, fill=fill, n=n)
+            out = eng._ingest(st, blocks)
+            return out.summary, out.buffer, out.n
+
+        # the replication check rejects the engine's auto-flush cond
+        # (replicated-vs-varying branch mismatch); bitwise-equivalence
+        # tests against the single-host engine guard correctness instead
+        smap_ingest = shard_map_unchecked(
+            shard_ingest, mesh=self.mesh,
+            in_specs=state_specs + (P(), spec1),
+            out_specs=state_specs)
+
+        depth = self.config.engine.buffer_depth
+        chunk = self.config.engine.chunk
+
+        def ingest_blocks(state: SketchState, blocks: jax.Array):
+            summary, buffer, n = smap_ingest(
+                state.summary, state.buffer, state.n, state.fill, blocks)
+            # fill evolves deterministically and identically on every shard
+            # (one append per chunk, reset at buffer_depth), so it is
+            # reconstructed here instead of shipped through shard_map.
+            # ceil-divide: the engine EMPTY-pads a partial trailing chunk
+            # and still appends it, so it counts toward the cursor.
+            n_chunks = -(-blocks.shape[-1] // chunk)
+            fill = (state.fill + n_chunks) % depth
+            return SketchState(summary=summary, buffer=buffer, fill=fill,
+                               n=n)
+
+        self._ingest_blocks_fn = jax.jit(ingest_blocks)
+
+        def shard_merged(summary, buffer, n, fill):
+            st = SketchState(summary=summary, buffer=buffer, fill=fill, n=n)
+            # flush view + local lane reduce + mesh reduction strategy; all
+            # ranks end with the same global summary — stack and read rank 0
+            merged = eng._merged(st)
+            return jax.tree.map(lambda a: a[None], merged)
+
+        smap_merged = shard_map_unchecked(
+            shard_merged, mesh=self.mesh,
+            in_specs=state_specs + (P(),),
+            out_specs=Summary(spec1, spec1, spec1))
+
+        def merged(state: SketchState) -> Summary:
+            stacked = smap_merged(state.summary, state.buffer, state.n,
+                                  state.fill)
+            return jax.tree.map(lambda a: a[0], stacked)
+
+        self._merged_fn = jax.jit(merged)
+
+    # -- state construction --------------------------------------------------
+
+    def init(self) -> SketchState:
+        """A fresh sharded state: W = shards×lanes tenants on the mesh."""
+        from repro.engine.state import init_state
+        c = self.config.engine
+        state = init_state(c.k, self.workers, c.buffer_depth, c.chunk,
+                           count_dtype=c.dtype)
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self.state_shardings())
+
+    def state_shardings(self) -> SketchState:
+        """NamedShardings of the runtime state (worker dim on the mesh)."""
+        if self.mesh is None:
+            raise ValueError("single-shard runtime has no mesh shardings")
+        row = NamedSharding(self.mesh, P(self._dim0))
+        rep = NamedSharding(self.mesh, P())
+        return SketchState(summary=Summary(row, row, row), buffer=row,
+                           fill=rep, n=row)
+
+    def block_sharding(self):
+        """Sharding that scatters (W, per) blocks row-wise onto shards."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(self._dim0))
+
+    # -- ingestion -------------------------------------------------------------
+
+    def ingest(self, state: SketchState, stream: jax.Array) -> SketchState:
+        """Ingest a global (N,) stream (or pre-decomposed (W, per) blocks)."""
+        stream = jnp.asarray(stream)
+        blocks = stream if stream.ndim == 2 else self.decompose(stream)
+        if blocks.shape[0] != self.workers:
+            raise ValueError(
+                f"ingest: got {blocks.shape[0]} worker blocks but this "
+                f"runtime decomposes over {self.workers} workers "
+                f"({self.shards} shards × {self.lanes} lanes); pass a flat "
+                f"(N,) stream or use runtime.decompose()")
+        return self._ingest_blocks_fn(state, blocks)
+
+    def feed(self, state: SketchState, blocks) -> SketchState:
+        """Double-buffered ingestion of an iterable of host stream blocks.
+
+        Each element is one (N,)-shaped host array (numpy); it is
+        decomposed on host, staged onto the mesh ``feed_depth`` transfers
+        ahead of the compute, and ingested in arrival order.
+        """
+        chunk = self.config.engine.chunk
+        staged = (host_blocks(b, self.workers, chunk) for b in blocks)
+        dev = DeviceFeed(staged, sharding=self.block_sharding(),
+                         depth=self.config.feed_depth)
+        for block in dev:
+            state = self._ingest_blocks_fn(state, block)
+        return state
+
+    # -- reads -----------------------------------------------------------------
+
+    def merged(self, state: SketchState) -> Summary:
+        """One global summary: flush view → lane reduce → mesh reduction."""
+        return self._merged_fn(state)
+
+    def snapshot(self, state: SketchState):
+        """Publish an immutable versioned QuerySnapshot (QueryService handoff).
+
+        Provenance carries the per-WORKER ingest counts ((W,) — the paper's
+        block decomposition: which rank×lane saw how much of the stream)
+        and the engine-resolved kernel. Like ``SketchEngine.snapshot``, the
+        ingest buffer is only *viewed*, never flushed — ``state`` keeps
+        appending afterwards.
+        """
+        from repro.service.snapshot import publish
+        summary = self._merged_fn(state)
+        return publish(summary, state.n.sum(), state.n,
+                       version=next(self._versions),
+                       kernel=self.engine.config.resolved_kernel())
+
+    def frontend(self):
+        """A QueryFrontend matched to this runtime's resolved kernel."""
+        from repro.service import QueryFrontend
+        return QueryFrontend.for_engine(self.engine)

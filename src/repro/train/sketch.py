@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.spacesaving import Summary, pad_stream
+from repro.core.parallel import block_decompose
+from repro.core.spacesaving import Summary
 from repro.engine import EngineConfig, SketchEngine, SketchState
 
 
@@ -31,21 +32,43 @@ from repro.engine import EngineConfig, SketchEngine, SketchState
 # Engine construction from an ArchConfig's SketchConfig
 # ---------------------------------------------------------------------------
 
-def token_engine(sk_cfg, groups: int, *, chunk: int | None = None
-                 ) -> SketchEngine:
-    """The engine behind the token sketch: G tenants, buffered updates.
+def token_engine_config(sk_cfg, groups: int, *,
+                        chunk: int | None = None) -> EngineConfig:
+    """EngineConfig of the token sketch: G tenants, buffered updates.
 
     ``chunk`` overrides ``sk_cfg.chunk`` for callers whose per-step payload
     is much smaller than the training chunk (e.g. the decode loop feeds B
     tokens per step — buffering them in C-wide slots would make every flush
-    sort/match mostly EMPTY padding).  Engine methods take the geometry from
-    the state, so any engine can still serve any state.
+    sort/match mostly EMPTY padding).
     """
-    return SketchEngine(EngineConfig(
+    return EngineConfig(
         k=sk_cfg.k_counters, tenants=groups,
         chunk=chunk if chunk is not None else sk_cfg.chunk,
         buffer_depth=sk_cfg.buffer_depth, flush_mode=sk_cfg.flush_mode,
-        reduction=sk_cfg.reduction, kernel=sk_cfg.kernel))
+        reduction=sk_cfg.reduction, kernel=sk_cfg.kernel)
+
+
+def token_engine(sk_cfg, groups: int, *, chunk: int | None = None
+                 ) -> SketchEngine:
+    """The engine behind the token sketch.  Engine methods take the
+    geometry from the state, so any engine can still serve any state."""
+    return SketchEngine(token_engine_config(sk_cfg, groups, chunk=chunk))
+
+
+def token_runtime(sk_cfg, groups: int, *, chunk: int | None = None,
+                  shards: int = 1):
+    """A StreamRuntime owning the token sketch end-to-end.
+
+    The runtime is the one consumer-facing ingestion surface (DESIGN.md
+    §8): serving telemetry holds this instead of a bare engine, getting
+    init/snapshot/frontend with shard provenance. ``shards=1`` is the
+    in-step configuration (the train/serve step already runs under pjit);
+    standalone drivers can shard over host devices.
+    """
+    from repro.runtime import RuntimeConfig, StreamRuntime
+    return StreamRuntime(RuntimeConfig(
+        engine=token_engine_config(sk_cfg, groups, chunk=chunk),
+        shards=shards))
 
 
 def expert_engine(sk_cfg) -> SketchEngine:
@@ -107,14 +130,13 @@ def update_token_sketch(engine: SketchEngine, sketch: SketchState,
                         tokens: jax.Array) -> SketchState:
     """tokens (B, S) — block-decompose over the G tenants, buffered update.
 
-    The (B·S) stream is split evenly over the G groups and fed through the
-    engine's deferred-merge path: appends are O(chunk), merges amortized.
+    The (B·S) stream is split evenly over the G groups (the canonical
+    ``block_decompose`` every ingestion surface shares — StreamRuntime
+    shards decompose the same way) and fed through the engine's
+    deferred-merge path: appends are O(chunk), merges amortized.
     """
-    g = sketch.tenants
-    flat = tokens.reshape(-1)
-    per = -(-flat.shape[0] // g)
-    flat = pad_stream(flat, per * g)
-    return engine.ingest(sketch, flat.reshape(g, per))
+    return engine.ingest(
+        sketch, block_decompose(tokens.reshape(-1), sketch.tenants))
 
 
 def update_expert_sketch(engine: SketchEngine, sketch: SketchState,

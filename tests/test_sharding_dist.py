@@ -1,6 +1,13 @@
 """Distribution tests that need >1 device: run in subprocesses so the
 XLA_FLAGS device-count override never leaks into the main pytest process."""
+import os
+
 from conftest import run_distributed as _run
+
+# the runtime matrix honors CI's kernel pin (scaling-smoke / kernel-matrix
+# legs run one impl per job); unset, both CPU impls are exercised
+_IMPLS = ((os.environ["REPRO_TEST_KERNEL"],)
+          if os.environ.get("REPRO_TEST_KERNEL") else ("jnp", "sorted"))
 
 
 def test_sharded_train_step_matches_single_device():
@@ -74,6 +81,74 @@ for mode in ("hier", "flat"):
     assert overestimation_violations(s0, stream) == 0
     m = evaluate(s0, stream, 64)
     assert m.recall == 1.0 and m.precision == 1.0, m
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_stream_runtime_sharded_matches_single_host():
+    """The runtime acceptance matrix: sharded ingest+snapshot is bitwise-
+    identical to the single-host engine over the same block decomposition,
+    for p ∈ {1,2,4,8} × every reduction strategy × kernel impl (pinned by
+    REPRO_TEST_KERNEL in CI). hierarchical runs the two-level ("pod",
+    "data") topology at p ≥ 4."""
+    out = _run(f"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.parallel import block_decompose
+from repro.data.synthetic import zipf_stream
+from repro.engine import EngineConfig, SketchEngine
+from repro.runtime import RuntimeConfig, StreamRuntime
+
+K, LANES, CHUNK, T = 128, 2, 256, 4
+stream = jnp.asarray(zipf_stream(30_000, 1.2, seed=0, max_id=10**5))
+
+def single_host(workers, kernel):
+    eng = SketchEngine(EngineConfig(k=K, tenants=workers, chunk=CHUNK,
+                                    buffer_depth=T, reduction="local",
+                                    kernel=kernel))
+    st = eng.ingest(eng.init(), block_decompose(stream, workers, CHUNK))
+    return eng.snapshot(st)
+
+refs = {{}}
+for impl in {_IMPLS!r}:
+    for p in (1, 2, 4, 8):
+        if (p, impl) not in refs:
+            refs[(p, impl)] = single_host(p * LANES, impl)
+        ref = refs[(p, impl)]
+        for strategy in ("butterfly", "allgather", "hierarchical"):
+            pods = 2 if (strategy == "hierarchical" and p >= 4) else 1
+            rt = StreamRuntime(RuntimeConfig(
+                engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                                    buffer_depth=T, kernel=impl),
+                shards=p, pods=pods, reduction=strategy))
+            st = rt.ingest(rt.init(), stream)
+            snap = rt.snapshot(st)
+            for name, a, b in zip(("items", "counts", "errors"),
+                                  snap.summary, ref.summary):
+                assert (np.asarray(a) == np.asarray(b)).all(), (
+                    impl, p, strategy, name)
+            assert int(snap.n) == int(ref.n), (impl, p, strategy)
+            assert snap.shard_n.shape == (p * LANES,)
+
+# pre-decomposed blocks whose width is NOT a chunk multiple: the engine
+# EMPTY-pads the trailing partial chunk and still appends it, so the
+# runtime's reconstructed fill cursor must ceil-divide (regression test)
+p = 2
+rt = StreamRuntime(RuntimeConfig(
+    engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK, buffer_depth=T),
+    shards=p, reduction="butterfly"))
+eng = SketchEngine(EngineConfig(k=K, tenants=p * LANES, chunk=CHUNK,
+                                buffer_depth=T, reduction="local"))
+odd = jnp.asarray(zipf_stream(p * LANES * 300, 1.2, seed=5,
+                              max_id=10**4)).reshape(p * LANES, 300)
+st_rt, st_eng = rt.init(), eng.init()
+for _ in range(3):                       # cross a flush boundary
+    st_rt = rt.ingest(st_rt, odd)
+    st_eng = eng.ingest(st_eng, odd)
+assert int(st_rt.fill) == int(st_eng.fill), (int(st_rt.fill),
+                                             int(st_eng.fill))
+for a, b in zip(rt.snapshot(st_rt).summary, eng.snapshot(st_eng).summary):
+    assert (np.asarray(a) == np.asarray(b)).all()
 print("OK")
 """)
     assert "OK" in out
