@@ -7,8 +7,11 @@ engine-buffered paths + COMBINE latency vs k, plus the per-strategy
 reduction latencies folded in from the scaling sweep); the ``scaling``
 section runs the StreamRuntime scaling study (repro.launch.scale, in a
 subprocess so it can force multiple host devices) and writes
-BENCH_scaling.json; the roofline section summarizes the dry-run artifacts
-(results/dryrun) if present.
+BENCH_scaling.json; the ``plan`` section runs the autotuner probe sweep
+(repro.launch.tune --quick, also subprocess-bootstrapped) into
+BENCH_plan.json and times the PlanService ``plan_resolution`` hot path;
+the roofline section summarizes the dry-run artifacts (results/dryrun) if
+present.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig1,sketch,scaling,...]
 """
@@ -20,6 +23,54 @@ import os
 import subprocess
 import sys
 from pathlib import Path
+
+
+def run_plan(emit, out_path: str, cache_dir: str) -> dict | None:
+    """The autotuner probe sweep via ``repro.launch.tune --quick``.
+
+    Runs in a subprocess for the same reason as the scaling section (the
+    reduction probes force extra host devices); writes BENCH_plan.json and
+    surfaces the chosen plan + check margins in the CSV. The plan is
+    cached into ``cache_dir`` (a bench-private directory, never the
+    user's real plan cache) so ``bench_plan_resolution`` can time
+    resolution of the plan THIS run produced.
+    """
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.tune", "--quick",
+         "--cache-dir", cache_dir, "--out", out_path],
+        capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        print(f"plan,failed,{r.stderr[-500:]!r}", file=sys.stderr)
+        return None
+    record = json.loads(Path(out_path).read_text())
+    for op, table in record["plan"]["kernels"].items():
+        emit(f"plan_{op}",
+             " ".join(f"k{k}:{v}" for k, v in sorted(
+                 table.items(), key=lambda kv: int(kv[0]))))
+    emit("plan_chunk", record["plan"]["chunk"])
+    emit("plan_model_max_rel_err", f"{record['model_max_rel_err']:.3f}")
+    emit("plan_json", out_path, "written")
+    return record
+
+
+def bench_plan_resolution(emit, cache_dir: str | None = None) -> dict:
+    """Per-'auto' plan-resolution overhead (the PlanService hot path).
+
+    Every traced 'auto' dispatch pays one ``resolve_impl`` call (a cache
+    stat + table lookup); this keeps that overhead a tracked number
+    alongside the kernel timings it gates. One shared implementation —
+    ``repro.launch.tune.resolution_timing`` — so the ``plan_resolution_*``
+    labels mean the same thing here and in BENCH_plan.json; ``cache_dir``
+    pins resolution to the plan ``run_plan`` just cached (the emitted
+    ``source=`` tells which path was actually measured).
+    """
+    from repro.launch.tune import resolution_timing
+
+    return resolution_timing(emit, reps=500, cache_dir=cache_dir)
 
 
 def run_scaling(emit, out_path: str) -> dict | None:
@@ -56,11 +107,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,tab34,fig56,sketch,"
-                         "scaling,roofline")
+                         "scaling,plan,roofline")
     ap.add_argument("--sketch-json", default="BENCH_sketch.json",
                     help="where the sketch-bench record is written")
     ap.add_argument("--scaling-json", default="BENCH_scaling.json",
                     help="where the scaling-sweep record is written")
+    ap.add_argument("--plan-json", default="BENCH_plan.json",
+                    help="where the tune-sweep record is written")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -86,6 +139,12 @@ def main() -> None:
     scaling_attempted = only is None or "scaling" in only
     if scaling_attempted:
         scaling_record = run_scaling(emit, args.scaling_json)
+
+    if only is None or "plan" in only:
+        import tempfile
+        plan_cache = tempfile.mkdtemp(prefix="bench-plan-cache-")
+        run_plan(emit, args.plan_json, plan_cache)
+        bench_plan_resolution(emit, cache_dir=plan_cache)
 
     if only is None or "sketch" in only:
         record = P.bench_sketch(emit)

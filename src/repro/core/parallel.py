@@ -56,6 +56,8 @@ def block_decompose(stream: jax.Array, workers: int,
     n = stream.shape[-1]
     per = -(-n // workers)
     per = -(-per // multiple) * multiple
+    if per == 0:     # empty stream → (workers, 0); pad_stream can't pad to 0
+        return stream.reshape(workers, 0)
     return pad_stream(stream, per * workers).reshape(workers, per)
 
 

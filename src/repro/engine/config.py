@@ -25,15 +25,16 @@ import dataclasses
 import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 KERNELS = ("auto", "pallas", "jnp", "sorted")
 FLUSH_MODES = ("deferred", "replay")
 
-# the dense↔sorted crossover threshold lives in kernels.ops.SORTED_MIN_K
-# (measured in BENCH_sketch.json) and is read lazily in resolved_kernel so
-# importing this module never pulls the Pallas kernel stack.
+# 'auto' resolution is owned by the PlanService (repro.plan): a measured,
+# fingerprint-cached plan when one exists, else the documented static
+# heuristic (Pallas on TPU, sorted past plan.SORTED_MIN_K off-TPU). Read
+# lazily in resolved_kernel so importing this module never pulls the
+# Pallas kernel stack.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,13 +75,17 @@ class EngineConfig:
         return jnp.dtype(self.count_dtype)
 
     def resolved_kernel(self) -> str:
-        """Collapse 'auto' to a concrete impl for the current backend."""
+        """Collapse 'auto' to a concrete impl for the current backend.
+
+        Resolution goes through the PlanService on the ``combine`` op —
+        the engine's hot path is the merge window, and one impl governs
+        every match/COMBINE/query it dispatches (bitwise-identical across
+        impls, so this is purely a speed decision).
+        """
         if self.kernel != "auto":
             return self.kernel
-        if jax.default_backend() == "tpu":
-            return "pallas"
-        from repro.kernels.ops import SORTED_MIN_K
-        return "sorted" if self.k >= SORTED_MIN_K else "jnp"
+        from repro.plan import resolve_impl
+        return resolve_impl("combine", self.k)
 
     def match_fn(self):
         """The combine-match kernel every merge in this engine uses.

@@ -1,10 +1,13 @@
 """Jit'd public wrappers for the Space Saving kernels.
 
 Dispatch policy (``impl``):
-  * ``'auto'``   — Pallas on TPU, pure-jnp reference elsewhere. Interpret-mode
-                   Pallas executes the kernel body per grid step in Python, so
-                   on CPU the vectorized jnp path is both the oracle and the
-                   fast path; on TPU the Pallas kernels control VMEM tiling.
+  * ``'auto'``   — resolved through the active :mod:`repro.plan` plan
+                   (``resolve_impl(op, k)``): a measured plan picks the
+                   impl probed fastest on this backend; with no plan
+                   cached, the documented static fallback applies — Pallas
+                   on TPU, and off-TPU the pure-jnp reference below
+                   ``plan.SORTED_MIN_K`` counters with the sorted
+                   merge-join above it (``match_weights`` stays jnp).
   * ``'pallas'`` — force the kernel (interpret=True off-TPU): used by tests.
   * ``'jnp'``    — force the reference.
   * ``'sorted'`` — sort + searchsorted merge-join (kernels/ref.py): O((k+c)·
@@ -30,15 +33,22 @@ from repro.kernels.ss_query import query_pallas
 
 EMPTY = -1
 
-# below this counter budget the dense k×c match beats sort+searchsorted on
-# CPU (measured in BENCH_sketch.json); 'auto' resolution — here for
-# combine_match, in EngineConfig.resolved_kernel for the engine — switches
-# on this threshold.
-SORTED_MIN_K = 256
-
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_impl(op: str, k: int) -> str:
+    """Collapse 'auto' for one op at counter budget k via the active plan.
+
+    Thin re-export of :func:`repro.plan.resolve_impl` (imported lazily so
+    the kernel stack never pulls the plan subsystem unless an 'auto' is
+    actually dispatched) — THE single auto-routing point; the former
+    inline ``k >= SORTED_MIN_K`` rules live on only as the plan's
+    zero-measurement static fallback (``repro.plan.static_impl``).
+    """
+    from repro.plan import resolve_impl as _resolve
+    return _resolve(op, k)
 
 
 def _pad1(a: jax.Array, mult: int, fill) -> jax.Array:
@@ -51,9 +61,11 @@ def _pad1(a: jax.Array, mult: int, fill) -> jax.Array:
 def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
                   *, impl: str = "auto", block_k: int = 512, block_c: int = 512):
     """See kernels/ss_match.py. Returns (add_w (k,), matched (c,) bool)."""
+    if impl == "auto":
+        impl = resolve_impl("update", s_items.shape[0])
     if impl == "sorted":
         return _ref.match_weights_sorted(s_items, h_items, h_weights)
-    if impl == "jnp" or (impl == "auto" and not _on_tpu()):
+    if impl == "jnp":
         return _ref.match_weights_ref(s_items, h_items, h_weights)
     k, c = s_items.shape[0], h_items.shape[0]
     bk = min(block_k, max(8, 1 << (k - 1).bit_length()))
@@ -76,13 +88,12 @@ def combine_match(s_items: jax.Array, c_items: jax.Array,
     and the errors channel is skipped (ref/sorted) or dropped (pallas).
     Returns (add_c (k,), add_e (k,) | None, matched_s (k,), matched_c (c,)).
 
-    Unlike ``match_weights``, 'auto' off-TPU picks the sorted merge-join at
-    k >= SORTED_MIN_K (the dense match is near-quadratic in k, and every
-    absorb_pool caller feeds well-formed distinct-id summaries/histograms,
-    so the sorted path is always bitwise-safe here).
+    'auto' resolves through the plan (every absorb_pool caller feeds
+    well-formed distinct-id summaries/histograms, so any impl the plan
+    picks — sorted included — is bitwise-safe here).
     """
-    if impl == "auto" and not _on_tpu():
-        impl = "sorted" if s_items.shape[0] >= SORTED_MIN_K else "jnp"
+    if impl == "auto":
+        impl = resolve_impl("combine", s_items.shape[0])
     if impl not in ("sorted", "jnp"):
         # the Pallas kernel contracts in int32; wider count dtypes would
         # silently truncate, so route them to the (exact) sorted merge-join.
@@ -113,13 +124,14 @@ def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
           block_k: int = 512, block_q: int = 512):
     """See kernels/ss_query.py. Returns (f̂, ε, monitored) per query.
 
-    'auto' off-TPU follows the same policy as ``combine_match``: sorted
-    merge-join at k >= SORTED_MIN_K (the read path probes well-formed
-    distinct-id summaries, so sorted is always bitwise-safe), dense jnp
-    below. Wide count dtypes are routed away from the int32 Pallas kernel.
+    'auto' resolves through the plan like ``combine_match`` (the read path
+    probes well-formed distinct-id summaries, so every impl is
+    bitwise-safe). Wide count dtypes are routed away from the int32 Pallas
+    kernel regardless of what the plan picked — a dtype-safety constraint,
+    not a policy choice.
     """
-    if impl == "auto" and not _on_tpu():
-        impl = "sorted" if s_items.shape[0] >= SORTED_MIN_K else "jnp"
+    if impl == "auto":
+        impl = resolve_impl("query", s_items.shape[0])
     if impl not in ("sorted", "jnp"):
         wide = any(jnp.dtype(a.dtype).itemsize > 4
                    for a in (s_counts, s_errors))

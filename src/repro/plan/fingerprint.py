@@ -1,0 +1,49 @@
+"""Device fingerprinting + plan-cache paths for the PlanService.
+
+A plan is only valid for the hardware it was measured on, so the cache is
+keyed by a *device fingerprint*: backend name, device kind and the jax
+major.minor version (kernel lowering changes across minor releases can
+shift the crossover points). The device COUNT is deliberately excluded —
+the tune CLI forces extra host devices to probe reduction strategies at
+several axis sizes, and a plan probed under 8 forced CPU devices must
+still resolve in a 1-device serving process; per-axis-size choices are
+keyed inside the plan (``reduction_for(p)``) instead.
+
+Cache location precedence (see service.py for the full plan precedence):
+
+  $REPRO_PLAN_CACHE             explicit cache directory
+  ~/.cache/repro/plans          default
+"""
+from __future__ import annotations
+
+import os
+import re
+from pathlib import Path
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9.]+", "-", s.strip()).strip("-").lower()
+
+
+def device_fingerprint() -> str:
+    """Stable id of (backend, device kind, jax major.minor)."""
+    import jax
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", None) or dev.platform
+    version = ".".join(jax.__version__.split(".")[:2])
+    return "-".join(_slug(p) for p in
+                    (jax.default_backend(), kind, f"jax{version}"))
+
+
+def cache_dir() -> Path:
+    env = os.environ.get("REPRO_PLAN_CACHE")
+    if env:
+        return Path(env)
+    return Path(os.path.expanduser("~")) / ".cache" / "repro" / "plans"
+
+
+def plan_path(fingerprint: str | None = None,
+              directory: os.PathLike | str | None = None) -> Path:
+    """Where the cached plan for ``fingerprint`` lives."""
+    d = Path(directory) if directory is not None else cache_dir()
+    return d / f"plan-{fingerprint or device_fingerprint()}.json"

@@ -1,0 +1,164 @@
+"""Calibrated microbenchmark probes over the real dispatch surface.
+
+The PlanService never reasons from first principles about kernel cost — it
+measures the exact entry points the production stack dispatches through
+(``kernels.ops.match_weights`` / ``combine_match`` / ``query`` and
+``StreamRuntime.merged`` per reduction strategy) on synthetic inputs shaped
+like real traffic: a well-formed distinct-id summary against a zipf-skewed
+chunk histogram. Each probe compiles once, then takes the min over
+``repeat`` timed runs (min, not mean: scheduling noise is strictly
+additive), with one calibration rule — if a single run is slower than
+``min_time`` the repeat count is cut to keep the sweep bounded.
+
+Rows are plain dicts (JSON-ready for BENCH_plan.json):
+
+  kernel probes     {op, impl, k, c, dtype, time_s}
+  reduction probes  {strategy, p, pods, k, time_s}
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+#: probe-input id-universe scale: ids are drawn from [0, 4·max(k, c)) so
+#: the histogram side can always hold c DISTINCT ids (the grid label c is
+#: the true input size in every cell) and a minority of ids hit the
+#: summary — between the all-hit and all-miss extremes, like steady-state
+#: zipf traffic
+_ID_SCALE = 4
+
+
+def timeit(fn, *args, repeat: int = 3, min_time: float = 0.25,
+           sample_s: float = 2e-3, max_inner: int = 256) -> float:
+    """Best-of-``repeat`` per-call wall time of a jax callable.
+
+    Compile/warm-up is excluded, then each timed sample runs the call in a
+    calibrated inner loop sized so one sample spans ~``sample_s`` — a
+    single microsecond-scale dispatch is scheduling noise (observed 10×+
+    swings between adjacent probe cells), and a mis-probed cell becomes a
+    mis-planned kernel, so fast cells are amortized over enough calls to
+    make the min-of-samples stable. Slow cells (single call ≥ min_time)
+    stop after two samples to keep the sweep bounded.
+    """
+    import jax
+    jax.block_until_ready(fn(*args))            # compile + warm caches
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    t1 = time.perf_counter() - t0               # calibration run
+    inner = max(1, min(max_inner, int(sample_s / max(t1, 1e-9))))
+    best = t1
+    for i in range(max(1, repeat)):
+        t0 = time.perf_counter()
+        for _ in range(inner - 1):
+            fn(*args)                           # async dispatch overlaps
+        jax.block_until_ready(fn(*args))
+        best = min(best, (time.perf_counter() - t0) / inner)
+        if best >= min_time and i >= 1:          # slow cell: stop early
+            break
+    return best
+
+
+def _probe_inputs(op: str, k: int, c: int, dtype, seed: int = 0):
+    """Synthetic well-formed inputs for one (op, k, c) probe cell."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed + 7 * k + c)
+    universe = _ID_SCALE * max(k, c)
+    # a fully-occupied summary with distinct ids (the sorted merge-join's
+    # contract), counts zipf-ish descending, errors a fraction of counts
+    s_items = jnp.asarray(rng.choice(universe, size=k, replace=False)
+                          .astype(np.int32))
+    counts = np.sort(rng.zipf(1.3, size=k).astype(np.int64))[::-1]
+    s_counts = jnp.asarray(np.minimum(counts, 2**28).astype(np.int32)
+                           .astype(dtype))
+    s_errors = jnp.asarray((np.asarray(s_counts) // 4).astype(dtype))
+    if op == "query":
+        queries = jnp.asarray(rng.integers(0, universe, size=c)
+                              .astype(np.int32))
+        return (s_items, s_counts, s_errors, queries)
+    # histogram side: exactly c distinct ids (combine's contract — both
+    # absorb_pool and summary-vs-summary COMBINE feed distinct-id pools)
+    h_items = jnp.asarray(rng.choice(universe, size=c,
+                                     replace=False).astype(np.int32))
+    h_weights = jnp.asarray(rng.integers(1, 100, size=h_items.shape[0])
+                            .astype(np.int32).astype(dtype))
+    if op == "update":
+        return (s_items, h_items, h_weights)
+    # COMBINE carries an error channel on the incoming side too (summary-
+    # vs-summary merge); a fraction of the weight is representative
+    return (s_items, h_items, h_weights,
+            jnp.asarray((np.asarray(h_weights) // 4).astype(dtype)))
+
+
+def probe_kernels(*, ops=("update", "combine", "query"),
+                  impls=("jnp", "sorted"), ks=(256, 2048), cs=(512, 2048),
+                  dtype="int32", repeat: int = 3, seed: int = 0,
+                  emit=lambda *a: None) -> list[dict]:
+    """Time every (op × impl × k × c) cell of the dispatch surface.
+
+    Each cell times the JITTED wrapper (impl closed over statically) —
+    every production dispatch runs under jit (engine methods, frontend
+    estimators), and eager per-op dispatch overhead would both swamp the
+    microsecond cells with noise and measure a path nothing ships.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    entry = {"update": kops.match_weights, "combine": kops.combine_match,
+             "query": kops.query}
+    rows = []
+    np_dtype = jnp.dtype(dtype)
+    for op in ops:
+        for k in ks:
+            for c in cs:
+                args = _probe_inputs(op, k, c, np_dtype, seed)
+                for impl in impls:
+                    fn = jax.jit(functools.partial(entry[op], impl=impl))
+                    t = timeit(fn, *args, repeat=repeat)
+                    rows.append({"op": op, "impl": impl, "k": int(k),
+                                 "c": int(c), "dtype": str(dtype),
+                                 "time_s": t})
+                    emit(f"probe_{op}_{impl}_k{k}_c{c}", f"{t:.4e}")
+    return rows
+
+
+def probe_reductions(*, ps=(1, 2, 4), strategies=("butterfly", "allgather",
+                                                  "hierarchical"),
+                     k: int = 2048, lanes: int = 2, chunk: int = 2048,
+                     depth: int = 4, n: int = 1 << 17, impl: str = "jnp",
+                     repeat: int = 3, seed: int = 0,
+                     emit=lambda *a: None) -> list[dict]:
+    """Per-strategy snapshot-reduction latency at each probed axis size.
+
+    Drives the real path — ``StreamRuntime.merged`` over an ingested
+    sharded state — so the number includes the flush view + the strategy's
+    collective rounds, exactly what a serving snapshot pays. ``ps`` is
+    silently clipped to the available device count (the tune CLI
+    bootstraps forced host devices up front, like launch.scale).
+    """
+    import jax
+
+    from repro.data.synthetic import zipf_stream
+    from repro.engine import EngineConfig
+    from repro.runtime import RuntimeConfig, StreamRuntime
+
+    rows = []
+    ps = [p for p in ps if p <= len(jax.devices())]
+    for p in ps:
+        for strategy in strategies:
+            pods = 2 if (strategy == "hierarchical" and p >= 4
+                         and p % 2 == 0) else 1
+            rt = StreamRuntime(RuntimeConfig(
+                engine=EngineConfig(k=k, tenants=lanes, chunk=chunk,
+                                    buffer_depth=depth, kernel=impl),
+                shards=p, pods=pods, reduction=strategy))
+            stream = zipf_stream(n, 1.1, seed=seed, max_id=10**6)
+            state = rt.ingest(rt.init(), stream)
+            t = timeit(rt.merged, state, repeat=repeat)
+            rows.append({"strategy": strategy, "p": int(p), "pods": pods,
+                         "k": int(k), "time_s": t})
+            emit(f"probe_reduce_{strategy}_p{p}", f"{t:.4e}")
+    return rows

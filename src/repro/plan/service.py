@@ -1,0 +1,135 @@
+"""PlanService — the one auditable decision point behind every "auto".
+
+Resolution precedence (first hit wins):
+
+  1. an explicitly installed plan (``install(plan)`` / ``use_plan(plan)``)
+     — tests and embedding applications;
+  2. ``$REPRO_PLAN_FILE`` — an explicit plan JSON path (serving jobs pin
+     the exact plan they were validated against);
+  3. the plan cache (``fingerprint.plan_path()``) for the current device
+     fingerprint — written by ``python -m repro.launch.tune``;
+  4. :func:`repro.plan.plan.static_plan` — the zero-measurement fallback
+     reproducing the pre-plan inline heuristics exactly.
+
+Loaded files are cached per (path, mtime) so per-dispatch resolution
+(``kernels/ops.py`` consults the active plan on every traced "auto" call)
+costs a stat, not a parse — ``plan_resolution`` timings in
+benchmarks/run.py keep that overhead visible.
+
+A cached/explicit plan whose fingerprint does not match the current device
+is IGNORED (with the static fallback taking over) rather than trusted: a
+plan measured on another backend is exactly the miscalibration this
+subsystem exists to prevent. ``$REPRO_PLAN_FILE`` skips that check — an
+operator pinning a file explicitly is overriding the fingerprint on
+purpose.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from pathlib import Path
+
+from repro.plan.fingerprint import device_fingerprint, plan_path
+from repro.plan.plan import ExecutionPlan, static_plan
+
+_installed: ExecutionPlan | None = None
+_file_cache: dict = {}     # path -> (mtime_ns, ExecutionPlan)
+
+
+def install(plan: ExecutionPlan | None) -> None:
+    """Pin ``plan`` as the active plan for this process (None clears)."""
+    global _installed
+    _installed = plan
+
+
+def clear() -> None:
+    """Drop the installed plan and every cached file load."""
+    install(None)
+    _file_cache.clear()
+
+
+@contextlib.contextmanager
+def use_plan(plan: ExecutionPlan):
+    """Scoped ``install`` — restores the previous plan on exit."""
+    prev = _installed
+    install(plan)
+    try:
+        yield plan
+    finally:
+        install(prev)
+
+
+def _load(path: Path) -> ExecutionPlan | None:
+    try:
+        mtime = path.stat().st_mtime_ns
+    except OSError:
+        return None
+    key = str(path)
+    hit = _file_cache.get(key)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    try:
+        plan = ExecutionPlan.load(path)
+    except (ValueError, KeyError, OSError):
+        plan = None     # malformed/stale-format cache → fallback, not crash
+    # failed loads are negative-cached too (same mtime key): resolution
+    # runs once per traced 'auto', and a corrupt file must cost a stat,
+    # not a re-parse + exception unwind, on every dispatch
+    _file_cache[key] = (mtime, plan)
+    return plan
+
+
+def active_plan() -> ExecutionPlan:
+    """The plan every "auto" in this process resolves through."""
+    if _installed is not None:
+        return _installed
+    env = os.environ.get("REPRO_PLAN_FILE")
+    if env:
+        plan = _load(Path(env))
+        if plan is None:
+            # a pinned plan is a statement that THIS configuration was
+            # validated; silently serving a different one on a typo'd
+            # path or truncated deploy is the failure mode to refuse
+            raise ValueError(
+                f"$REPRO_PLAN_FILE={env!r} is missing or not a valid "
+                f"plan JSON; unset it to fall back to the plan cache / "
+                f"static heuristics")
+        return plan
+    fp = device_fingerprint()
+    plan = _load(plan_path(fp))
+    if plan is not None and plan.fingerprint == fp:
+        return plan
+    return static_plan(fp)
+
+
+def resolve_impl(op: str, k: int, *, plan: ExecutionPlan | None = None) -> str:
+    """Collapse one "auto" to a concrete kernel impl.
+
+    THE helper behind every auto-dispatch in the tree: ``kernels/ops.py``
+    ('auto' wrappers), ``EngineConfig.resolved_kernel`` and, transitively,
+    the QueryFrontend. ``k`` is the counter budget of the summary being
+    dispatched on — the axis the dense↔sorted crossover moves along.
+    """
+    return (plan or active_plan()).impl_for(op, int(k))
+
+
+def resolve_reduction(p: int, *,
+                      plan: ExecutionPlan | None = None) -> str:
+    """Collapse reduction='auto' to a registry strategy for a p-wide axis."""
+    return (plan or active_plan()).reduction_for(int(p))
+
+
+def planned_engine_config(k: int, *, plan: ExecutionPlan | None = None,
+                          **overrides):
+    """An EngineConfig built on the plan's measured chunk/buffer geometry.
+
+    The consumer of the plan's ``chunk``/``buffer_depth`` recommendations:
+    kernel and reduction stay ``'auto'`` (resolved per dispatch through
+    the same plan) unless overridden, so ``planned_engine_config(k=4096)``
+    is the one-call "give me the tuned configuration" entry point.
+    """
+    from repro.engine.config import EngineConfig
+    p = plan or active_plan()
+    kw = dict(k=k, chunk=p.chunk, buffer_depth=p.buffer_depth)
+    kw.update(overrides)
+    return EngineConfig(**kw)

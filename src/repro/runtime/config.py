@@ -25,34 +25,55 @@ class RuntimeConfig:
 
     engine: EngineConfig = EngineConfig()
     shards: int | None = None   # p — data-axis shards; None → all host devices
-    pods: int = 1               # outer mesh axis (>1 → ("pod","data") mesh)
-    reduction: str | None = None   # cross-shard strategy; None → engine's
+    pods: int | None = 1        # outer mesh axis (>1 → ("pod","data") mesh);
+                                # None → the active plan's split for p shards
+    reduction: str | None = None   # cross-shard strategy; None → engine's,
+                                   # 'auto' → the active plan's choice for p
     feed_depth: int = 2         # host→device staging slots (double-buffered)
 
     def __post_init__(self):
         if self.shards is not None and self.shards < 1:
             raise ValueError(f"shards must be >= 1 or None, got {self.shards}")
-        if self.pods < 1:
-            raise ValueError(f"pods must be >= 1, got {self.pods}")
-        if (self.shards is not None and self.pods > 1
-                and self.shards % self.pods):
+        if self.pods is not None and self.pods < 1:
+            raise ValueError(f"pods must be >= 1 or None, got {self.pods}")
+        if (self.shards is not None and self.pods is not None
+                and self.pods > 1 and self.shards % self.pods):
             raise ValueError(
                 f"pods ({self.pods}) must divide shards ({self.shards})")
         if self.feed_depth < 1:
             raise ValueError(
                 f"feed_depth must be >= 1, got {self.feed_depth}")
-        if self.reduction is not None:
+        if self.reduction is not None and self.reduction != "auto":
             from repro.engine.reductions import reduction_names
             if self.reduction not in reduction_names():
                 raise ValueError(
                     f"reduction {self.reduction!r} not registered; have "
-                    f"{sorted(reduction_names())}")
+                    f"{sorted(reduction_names())} (or 'auto' for the "
+                    f"plan-resolved strategy)")
 
     @property
     def lanes(self) -> int:
         """Vmapped sketch lanes per shard (the OpenMP-thread level)."""
         return self.engine.tenants
 
-    def resolved_reduction(self) -> str:
+    def resolved_reduction(self, shards: int | None = None) -> str:
+        """Collapse the strategy choice for a ``shards``-wide data axis.
+
+        ``'auto'`` goes through the PlanService (measured per-axis-size
+        latencies when a plan is cached, 'local'/'butterfly' static
+        fallback otherwise); ``None`` keeps deferring to the wrapped
+        engine's declared strategy, as before.
+        """
+        if self.reduction == "auto":
+            from repro.plan import resolve_reduction
+            p = shards if shards is not None else (self.shards or 1)
+            return resolve_reduction(p)
         return self.reduction if self.reduction is not None \
             else self.engine.reduction
+
+    def resolved_pods(self, shards: int) -> int:
+        """The pod split for ``shards`` ranks (None → plan-resolved)."""
+        if self.pods is not None:
+            return self.pods
+        from repro.plan import active_plan
+        return active_plan().pods_for(shards)

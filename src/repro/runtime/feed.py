@@ -28,7 +28,10 @@ def host_blocks(stream: np.ndarray, workers: int,
 
     Pads with EMPTY and reshapes to (workers, per) with numpy so staging
     never round-trips through a device: decompose on host, then one sharded
-    ``device_put`` scatters each worker row to its device.
+    ``device_put`` scatters each worker row to its device. A final partial
+    chunk is EMPTY-padded up to the ``multiple`` boundary (never dropped),
+    and an empty stream decomposes to (workers, 0) — ``StreamRuntime.feed``
+    skips such blocks instead of staging them.
     """
     stream = np.asarray(stream)
     n = stream.shape[-1]

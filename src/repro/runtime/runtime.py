@@ -60,9 +60,10 @@ class StreamRuntime:
         self.config = config
         self.shards = (config.shards if config.shards is not None
                        else len(jax.devices()))
-        if config.pods > 1 and self.shards % config.pods:
+        self.pods = config.resolved_pods(self.shards)
+        if self.pods > 1 and self.shards % self.pods:
             raise ValueError(
-                f"pods ({config.pods}) must divide shards ({self.shards}, "
+                f"pods ({self.pods}) must divide shards ({self.shards}, "
                 f"auto-sized to the host device count)")
         n_dev = len(jax.devices())
         if self.shards > n_dev:
@@ -79,10 +80,10 @@ class StreamRuntime:
             self.mesh = None
             self._axes = ()
             self._dim0 = None
-        elif config.pods > 1:
+        elif self.pods > 1:
             from repro.launch.mesh import make_mesh_shape
             self.mesh = make_mesh_shape(
-                (config.pods, self.shards // config.pods), ("pod", "data"))
+                (self.pods, self.shards // self.pods), ("pod", "data"))
             # innermost (intra-pod) axis first — the reduction registry's
             # axis_names convention; dim-0 sharding is mesh-major.
             self._axes = ("data", "pod")
@@ -95,7 +96,7 @@ class StreamRuntime:
 
         self.engine = SketchEngine(dataclasses.replace(
             config.engine,
-            reduction=config.resolved_reduction(),
+            reduction=config.resolved_reduction(self.shards),
             axis_names=self._axes))
         self._versions = itertools.count(1)
         self._build_programs()
@@ -210,7 +211,16 @@ class StreamRuntime:
     # -- ingestion -------------------------------------------------------------
 
     def ingest(self, state: SketchState, stream: jax.Array) -> SketchState:
-        """Ingest a global (N,) stream (or pre-decomposed (W, per) blocks)."""
+        """Ingest a global (N,) stream (or pre-decomposed (W, per) blocks).
+
+        Pre-decomposed blocks must come from the canonical decomposition:
+        their per-worker length has to be a multiple of the engine chunk.
+        Accepting a ragged tail here would silently EMPTY-pad it *inside*
+        the pending buffer, shifting every later chunk boundary off the
+        canonical single-host decomposition — the bitwise-equivalence
+        contract would break without any visible error. An empty stream is
+        a no-op (zero chunks appended, state returned as-is).
+        """
         stream = jnp.asarray(stream)
         blocks = stream if stream.ndim == 2 else self.decompose(stream)
         if blocks.shape[0] != self.workers:
@@ -219,6 +229,15 @@ class StreamRuntime:
                 f"runtime decomposes over {self.workers} workers "
                 f"({self.shards} shards × {self.lanes} lanes); pass a flat "
                 f"(N,) stream or use runtime.decompose()")
+        if blocks.shape[-1] % self.config.engine.chunk:
+            raise ValueError(
+                f"ingest: per-worker block length {blocks.shape[-1]} is not "
+                f"a multiple of the engine chunk "
+                f"({self.config.engine.chunk}); decompose with "
+                f"runtime.decompose() / host_blocks(), which EMPTY-pad to "
+                f"chunk multiples")
+        if blocks.shape[-1] == 0:
+            return state
         return self._ingest_blocks_fn(state, blocks)
 
     def feed(self, state: SketchState, blocks) -> SketchState:
@@ -233,6 +252,8 @@ class StreamRuntime:
         dev = DeviceFeed(staged, sharding=self.block_sharding(),
                          depth=self.config.feed_depth)
         for block in dev:
+            if block.shape[-1] == 0:    # empty host block → nothing pending
+                continue
             state = self._ingest_blocks_fn(state, block)
         return state
 

@@ -23,7 +23,11 @@ Query surface:
 
 Batch planning: point-estimate batches are EMPTY-padded up to power-of-two
 buckets (≥ ``min_batch``) before hitting the jitted kernel, so arbitrary
-caller batch sizes compile O(log q) variants instead of one per size.
+caller batch sizes compile O(log q) variants instead of one per size. The
+bucket floor defaults to the active ExecutionPlan's ``query_min_batch``
+(measured by ``launch.tune``: the batch size below which the query kernel
+is launch-overhead-bound on this backend); likewise ``kernel='auto'``
+resolves through the plan inside ``kernels.ops.query``.
 """
 from __future__ import annotations
 
@@ -111,9 +115,13 @@ class FrequentItemsReport:
 class QueryFrontend:
     """Stateless query planner over QuerySnapshots, one kernel impl."""
 
-    def __init__(self, kernel: str = "auto", *, min_batch: int = 16):
+    def __init__(self, kernel: str = "auto", *,
+                 min_batch: int | None = None):
         if kernel not in IMPLS:
             raise ValueError(f"kernel {kernel!r} not in {IMPLS}")
+        if min_batch is None:
+            from repro.plan import active_plan
+            min_batch = active_plan().query_min_batch
         if min_batch < 1:
             raise ValueError(f"min_batch must be >= 1, got {min_batch}")
         self.kernel = kernel

@@ -1,8 +1,17 @@
 import os
 import subprocess
 import sys
+import tempfile
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# hermetic plan resolution: point the PlanService cache at a fresh empty
+# per-session directory — unconditionally, so neither a developer's tuned
+# plan (~/.cache/repro/plans or an exported REPRO_PLAN_CACHE) nor a
+# pinned REPRO_PLAN_FILE can change which kernels the 'auto' tests
+# dispatch.
+os.environ["REPRO_PLAN_CACHE"] = tempfile.mkdtemp(
+    prefix="repro-test-plan-cache-")
+os.environ.pop("REPRO_PLAN_FILE", None)
 
 import numpy as np
 import pytest
@@ -26,7 +35,8 @@ def run_distributed(snippet: str, n_dev: int = 8, timeout: int = 560) -> str:
     env = {"PYTHONPATH": "src",
            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
            "JAX_PLATFORMS": "cpu",
-           "HOME": os.environ.get("HOME", "/tmp")}
+           "HOME": os.environ.get("HOME", "/tmp"),
+           "REPRO_PLAN_CACHE": os.environ["REPRO_PLAN_CACHE"]}
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=timeout, env=env)
     assert r.returncode == 0, r.stderr[-3000:]

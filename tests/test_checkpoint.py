@@ -54,6 +54,65 @@ def test_structure_mismatch_rejected(tmp_path):
         CKPT.restore(tmp_path, 1, other)
 
 
+def test_sketch_state_roundtrip_bitwise_snapshot(tmp_path, rng):
+    """SketchState restore → bitwise-identical snapshot (engine state)."""
+    stream = np.minimum(rng.zipf(1.2, 30_000), 10**6).astype(np.int32)
+    engine = SketchEngine(EngineConfig(k=128, tenants=4, chunk=512,
+                                       buffer_depth=4, kernel="jnp"))
+    state = engine.ingest(engine.init(), jnp.asarray(stream.reshape(4, -1)))
+    assert int(state.fill) > 0      # pending chunks must survive the trip
+    CKPT.save(tmp_path, 7, state, {"step": 7})
+    restored, _ = CKPT.restore(tmp_path, 7, engine.init())
+
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(state),
+                              jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(leaf_a),
+                                      np.asarray(leaf_b))
+    snap_a, snap_b = engine.snapshot(state), engine.snapshot(restored)
+    for a, b in zip(snap_a.summary, snap_b.summary):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(snap_a.n) == int(snap_b.n)
+    # and the restored state keeps ingesting identically
+    more = jnp.asarray(stream[:2048].reshape(4, -1))
+    s2a, s2b = engine.ingest(state, more), engine.ingest(restored, more)
+    for a, b in zip(jax.tree_util.tree_leaves(s2a),
+                    jax.tree_util.tree_leaves(s2b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_plus_plan_state_roundtrip(tmp_path, rng):
+    """The serving pair (engine state + ExecutionPlan) round-trips: the
+    plan rides the manifest's data_state, and the restored pair resolves
+    and snapshots exactly like the original."""
+    from repro.plan import ExecutionPlan, device_fingerprint, use_plan
+
+    plan = ExecutionPlan(
+        fingerprint=device_fingerprint(), source="measured",
+        kernels={"combine": {128: "sorted"}}, reductions={2: "allgather"},
+        pods={}, chunk=512, buffer_depth=4, query_min_batch=32)
+    stream = np.minimum(rng.zipf(1.3, 20_000), 10**6).astype(np.int32)
+    with use_plan(plan):
+        engine = SketchEngine(EngineConfig(k=128, tenants=4, chunk=512,
+                                           buffer_depth=4))
+        assert engine.config.resolved_kernel() == "sorted"
+        state = engine.ingest(engine.init(),
+                              jnp.asarray(stream.reshape(4, -1)))
+        CKPT.save(tmp_path, 1, state, {"plan": plan.to_json()})
+        restored, dstate = CKPT.restore(tmp_path, 1, engine.init())
+        snap = engine.snapshot(state)
+
+    plan2 = ExecutionPlan.from_json(dstate["plan"])
+    assert plan2 == plan
+    with use_plan(plan2):
+        engine2 = SketchEngine(EngineConfig(k=128, tenants=4, chunk=512,
+                                            buffer_depth=4))
+        snap2 = engine2.snapshot(restored)
+    assert snap2.kernel == snap.kernel == "sorted"
+    for a, b in zip(snap.summary, snap2.summary):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(snap.n) == int(snap2.n)
+
+
 def test_elastic_sketch_reshard_preserves_bounds(rng):
     stream = np.minimum(rng.zipf(1.2, 20_000), 10**6).astype(np.int32)
     engine = SketchEngine(EngineConfig(k=64, tenants=8, chunk=512,

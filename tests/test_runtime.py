@@ -167,6 +167,46 @@ def test_host_blocks_matches_block_decompose():
     np.testing.assert_array_equal(hb, bd)
 
 
+def test_ingest_rejects_off_chunk_blocks():
+    # a ragged pre-decomposed tail would be EMPTY-padded INSIDE the pending
+    # buffer, silently shifting later chunk boundaries off the canonical
+    # decomposition — rejected instead of truncated/misaligned.
+    rt = _runtime(shards=1)
+    with pytest.raises(ValueError, match="multiple of the engine chunk"):
+        rt.ingest(rt.init(), jnp.ones((rt.workers, CHUNK + 1), jnp.int32))
+
+
+def test_empty_stream_is_noop():
+    rt = _runtime(shards=1)
+    state0 = rt.init()
+    # flat empty stream, empty pre-decomposed blocks, and an empty feed
+    # block all leave the state untouched (no crash, no truncation)
+    _states_equal(rt.ingest(state0, jnp.zeros((0,), jnp.int32)), state0)
+    _states_equal(rt.ingest(state0, rt.decompose(jnp.zeros((0,), jnp.int32))),
+                  state0)
+    _states_equal(rt.feed(state0, [np.zeros((0,), np.int32)]), state0)
+    assert rt.decompose(jnp.zeros((0,), jnp.int32)).shape \
+        == (rt.workers, 0)
+    snap = rt.snapshot(rt.feed(state0, iter([])))
+    assert int(snap.n) == 0
+
+
+def test_feed_final_partial_block_not_truncated():
+    # last host block shorter than workers×chunk (a final partial chunk):
+    # every item must land (EMPTY-padded, never dropped) and the result
+    # must equal ingesting the same blocks one by one
+    rt = _runtime(shards=1)
+    sizes = [rt.workers * CHUNK, rt.workers * CHUNK // 2 + 7]
+    blocks = [np.asarray(zipf_stream(s, 1.1, seed=i, max_id=10**5))
+              for i, s in enumerate(sizes)]
+    fed = rt.feed(rt.init(), iter(blocks))
+    assert int(fed.n.sum()) == sum(sizes)
+    seq = rt.init()
+    for b in blocks:
+        seq = rt.ingest(seq, jnp.asarray(host_blocks(b, rt.workers, CHUNK)))
+    _states_equal(fed, seq)
+
+
 def test_device_feed_preserves_order_and_depth():
     with pytest.raises(ValueError, match="depth"):
         DeviceFeed([], depth=0)

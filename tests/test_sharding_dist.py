@@ -130,9 +130,13 @@ for impl in {_IMPLS!r}:
             assert int(snap.n) == int(ref.n), (impl, p, strategy)
             assert snap.shard_n.shape == (p * LANES,)
 
-# pre-decomposed blocks whose width is NOT a chunk multiple: the engine
-# EMPTY-pads the trailing partial chunk and still appends it, so the
-# runtime's reconstructed fill cursor must ceil-divide (regression test)
+# pre-decomposed blocks whose width is NOT a chunk multiple are rejected
+# up front (repeatedly EMPTY-padding a ragged tail INSIDE the pending
+# buffer would drift off the canonical decomposition without any visible
+# error); padded to the chunk boundary — what host_blocks()/decompose()
+# produce — the sharded runtime still matches the single-host engine
+# bitwise across flush boundaries, EMPTY-padded partial chunks included
+# (the reconstructed fill cursor must ceil-divide; regression test)
 p = 2
 rt = StreamRuntime(RuntimeConfig(
     engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK, buffer_depth=T),
@@ -141,10 +145,17 @@ eng = SketchEngine(EngineConfig(k=K, tenants=p * LANES, chunk=CHUNK,
                                 buffer_depth=T, reduction="local"))
 odd = jnp.asarray(zipf_stream(p * LANES * 300, 1.2, seed=5,
                               max_id=10**4)).reshape(p * LANES, 300)
+try:
+    rt.ingest(rt.init(), odd)
+    raise SystemExit("expected ValueError for off-chunk blocks")
+except ValueError as e:
+    assert "multiple of the engine chunk" in str(e), e
+pad = jnp.full((p * LANES, 2 * CHUNK - 300), -1, odd.dtype)
+padded = jnp.concatenate([odd, pad], axis=1)
 st_rt, st_eng = rt.init(), eng.init()
 for _ in range(3):                       # cross a flush boundary
-    st_rt = rt.ingest(st_rt, odd)
-    st_eng = eng.ingest(st_eng, odd)
+    st_rt = rt.ingest(st_rt, padded)
+    st_eng = eng.ingest(st_eng, padded)
 assert int(st_rt.fill) == int(st_eng.fill), (int(st_rt.fill),
                                              int(st_eng.fill))
 for a, b in zip(rt.snapshot(st_rt).summary, eng.snapshot(st_eng).summary):
