@@ -175,16 +175,18 @@ def fig56_formulation(emit):
 # BENCH_sketch — perf trajectory of the sketch subsystem across PRs
 # ---------------------------------------------------------------------------
 
-def bench_sketch(emit):
+def bench_sketch(emit, quick: bool = False):
     """Updates/sec for the scan / chunked / engine-buffered paths plus
     COMBINE latency vs k.  Returns the record run.py writes to
-    BENCH_sketch.json so the numbers are tracked across PRs."""
+    BENCH_sketch.json so the numbers are tracked across PRs.  ``quick``
+    is CI-smoke scale — the record still has every key, but the numbers
+    are not comparable to full runs (the config carries the flag)."""
     k, chunk, depth = 2048, 256, 8
-    n = 1 << 20
+    n = 1 << 17 if quick else 1 << 20
     s = jnp.asarray(zipf_stream(n, 1.1, seed=11, max_id=10**7))
     init = init_summary(k)
 
-    n_scan = 20_000
+    n_scan = 2_000 if quick else 20_000
     t_scan = _timeit(lambda: jax.block_until_ready(
         spacesaving_scan(init, s[:n_scan])))
     ups_scan = n_scan / t_scan
@@ -217,7 +219,7 @@ def bench_sketch(emit):
     # 'jnp' is the dense k×k match (near-quadratic in k), 'sorted' the
     # merge-join path the engine resolves to on CPU at large k.
     combine_latency = {impl: {} for impl in ("jnp", "sorted")}
-    for kc in [512, 2048, 8192]:
+    for kc in ([512, 2048] if quick else [512, 2048, 8192]):
         s1 = spacesaving_chunked(init_summary(kc), s[:n // 2], chunk_size=2048)
         s2 = spacesaving_chunked(init_summary(kc), s[n // 2:], chunk_size=2048)
         for impl in combine_latency:
@@ -227,14 +229,15 @@ def bench_sketch(emit):
             combine_latency[impl][str(kc)] = t_comb
             emit(f"sketch_combine_latency_{impl}_k{kc}", f"{t_comb:.3e}",
                  "seconds")
-    speedup_8192 = (combine_latency["jnp"]["8192"] /
-                    combine_latency["sorted"]["8192"])
-    emit("sketch_combine_sorted_speedup_k8192", f"{speedup_8192:.2f}",
+    k_big = max(combine_latency["jnp"], key=int)
+    speedup_big = (combine_latency["jnp"][k_big] /
+                   combine_latency["sorted"][k_big])
+    emit(f"sketch_combine_sorted_speedup_k{k_big}", f"{speedup_big:.2f}",
          "dense/sorted")
 
     return {
         "config": {"k": k, "chunk": chunk, "buffer_depth": depth, "n": n,
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(), "quick": bool(quick)},
         "updates_per_sec": {
             "scan": ups_scan,
             "chunked": ups_chunk,
@@ -243,5 +246,5 @@ def bench_sketch(emit):
         },
         "speedup_engine_buffered_vs_chunked": ups_eng / ups_chunk,
         "combine_latency_s": combine_latency,
-        "combine_sorted_speedup_k8192": speedup_8192,
+        f"combine_sorted_speedup_k{k_big}": speedup_big,
     }

@@ -10,10 +10,19 @@ subprocess so it can force multiple host devices) and writes
 BENCH_scaling.json; the ``plan`` section runs the autotuner probe sweep
 (repro.launch.tune --quick, also subprocess-bootstrapped) into
 BENCH_plan.json and times the PlanService ``plan_resolution`` hot path;
-the roofline section summarizes the dry-run artifacts (results/dryrun) if
-present.
+the ``roofline`` section runs the ENGINE roofline (measured kernel
+dispatch vs a bytes/ops lower bound at measured host peaks, per op ×
+impl × k × chunk) into the ``roofline`` key of BENCH_sketch.json, and
+summarizes the model-level dry-run artifacts (results/dryrun) if present.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig1,sketch,scaling,...]
+                                          [--quick] [--check]
+
+``--quick`` shrinks the sketch/roofline sections to CI-smoke scale (and,
+when --only is not given, restricts the run to just those two sections);
+``--check`` gates the run: fused must be bitwise-identical to the unfused
+paths across the state matrix, and no planned impl may regress the
+measured best beyond tolerance — non-zero exit on failure.
 """
 from __future__ import annotations
 
@@ -114,8 +123,16 @@ def main() -> None:
                     help="where the scaling-sweep record is written")
     ap.add_argument("--plan-json", default="BENCH_plan.json",
                     help="where the tune-sweep record is written")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-smoke scale; without --only, restricts the "
+                         "run to the sketch+roofline sections")
+    ap.add_argument("--check", action="store_true",
+                    help="gate: fused ≡ unfused bitwise matrix + planned "
+                         "impl within tolerance of the measured best")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.quick and only is None:
+        only = {"sketch", "roofline"}
 
     from benchmarks import paper_benches as P
 
@@ -146,8 +163,35 @@ def main() -> None:
         run_plan(emit, args.plan_json, plan_cache)
         bench_plan_resolution(emit, cache_dir=plan_cache)
 
+    check_failures: list[str] = []
+    roofline_record = None
+    if only is None or "roofline" in only:
+        from benchmarks import roofline as R
+
+        # the engine roofline runs against the real kops dispatch, so it
+        # inherits whatever plan is cached for this process (same rule as
+        # production 'auto')
+        roofline_record = R.engine_roofline(emit, quick=args.quick)
+        if args.check:
+            check_failures += R.fused_equivalence_matrix(
+                quick=args.quick, emit=emit)
+            check_failures += R.planned_vs_best(
+                roofline_record["cells"], emit=emit)
+
+        # model-level dry-run artifacts, when a dryrun sweep has been run
+        try:
+            recs = [d for d in R.load("", "single") if "skipped" not in d]
+            for d in recs:
+                r = d["roofline"]
+                emit(f"roofline_{d['arch']}_{d['shape']}",
+                     r["step_lower_bound_s"],
+                     f"bottleneck={r['bottleneck']};useful="
+                     f"{(d['useful_flops_ratio'] or 0):.2f}")
+        except (FileNotFoundError, LookupError) as e:
+            print(f"roofline_dryrun,skipped,{e}", file=sys.stderr)
+
     if only is None or "sketch" in only:
-        record = P.bench_sketch(emit)
+        record = P.bench_sketch(emit, quick=args.quick)
         # keep BENCH_sketch.json and BENCH_scaling.json consistent: the
         # per-strategy reduction latencies ride alongside combine_latency_s.
         # Fold from the on-disk record only when the scaling section was
@@ -159,21 +203,26 @@ def main() -> None:
         if scaling_record is not None:
             record["reduction_latency_s"] = \
                 scaling_record["reduction_latency_s"]
+        if roofline_record is not None:
+            record["roofline"] = roofline_record
         Path(args.sketch_json).write_text(json.dumps(record, indent=2) + "\n")
         print(f"sketch_json,{args.sketch_json},written", flush=True)
+    elif roofline_record is not None and Path(args.sketch_json).exists():
+        # roofline-only run: fold the section into the existing record
+        # in place rather than dropping it on the floor
+        record = json.loads(Path(args.sketch_json).read_text())
+        record["roofline"] = roofline_record
+        Path(args.sketch_json).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"sketch_json,{args.sketch_json},roofline-updated", flush=True)
 
-    if only is None or "roofline" in only:
-        try:
-            from benchmarks.roofline import load
-            recs = [d for d in load("", "single") if "skipped" not in d]
-            for d in recs:
-                r = d["roofline"]
-                emit(f"roofline_{d['arch']}_{d['shape']}",
-                     r["step_lower_bound_s"],
-                     f"bottleneck={r['bottleneck']};useful="
-                     f"{(d['useful_flops_ratio'] or 0):.2f}")
-        except Exception as e:   # dry-run artifacts absent
-            print(f"roofline,skipped,{type(e).__name__}", file=sys.stderr)
+    if args.check:
+        if check_failures:
+            for f in check_failures:
+                print(f"check,FAIL,{f}", file=sys.stderr)
+            sys.exit(1)
+        emit("check", "ok",
+             "fused-bitwise-matrix+planned-vs-best" if roofline_record
+             else "no-roofline-section")
 
 
 if __name__ == "__main__":

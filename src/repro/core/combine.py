@@ -67,7 +67,8 @@ def _pad_pow2(stacked: Summary) -> Summary:
                    errors=pad(stacked.errors, 0))
 
 
-def reduce_summaries(stacked: Summary, *, match_fn=None) -> Summary:
+def reduce_summaries(stacked: Summary, *, match_fn=None,
+                     pair_fn=None) -> Summary:
     """Reduce a stack of P summaries (leading axis) to one, log₂(P) rounds.
 
     Each round merges ADJACENT pairs (2i, 2i+1) with a vmapped COMBINE — the
@@ -84,7 +85,17 @@ def reduce_summaries(stacked: Summary, *, match_fn=None) -> Summary:
     block results.  This is what makes a sharded StreamRuntime snapshot
     (per-shard lane reduce, then any mesh strategy) bitwise-identical to
     the single-host reduction over all p·L tenants (tests/test_runtime.py).
+
+    ``pair_fn`` replaces the vmapped COMBINE for one round — a
+    ``(batched Summary, batched Summary) -> batched Summary`` callable
+    (the engine passes the fused megakernel's batched pairwise combine
+    here); it must be bitwise-identical to the default, which every
+    ``kernels.ops.combine_summaries`` impl is.
     """
+    if pair_fn is None:
+        def pair_fn(a, b):
+            return jax.vmap(
+                lambda x, y: combine(x, y, match_fn=match_fn))(a, b)
     stacked = _pad_pow2(stacked)
     cur = stacked
     while cur.items.shape[0] > 1:
@@ -93,5 +104,5 @@ def reduce_summaries(stacked: Summary, *, match_fn=None) -> Summary:
             lambda a: a.reshape((half, 2) + a.shape[1:]), cur)
         s1 = jax.tree.map(lambda a: a[:, 0], pairs)
         s2 = jax.tree.map(lambda a: a[:, 1], pairs)
-        cur = jax.vmap(lambda a, b: combine(a, b, match_fn=match_fn))(s1, s2)
+        cur = pair_fn(Summary(*s1), Summary(*s2))
     return jax.tree.map(lambda a: a[0], cur)

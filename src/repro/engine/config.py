@@ -27,7 +27,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-KERNELS = ("auto", "pallas", "jnp", "sorted")
+KERNELS = ("auto", "pallas", "jnp", "sorted", "fused")
 FLUSH_MODES = ("deferred", "replay")
 
 # 'auto' resolution is owned by the PlanService (repro.plan): a measured,
@@ -48,9 +48,12 @@ class EngineConfig:
     buffer_depth: int = 8          # T — chunks buffered between merges
     flush_mode: str = "deferred"   # 'deferred' | 'replay'
     reduction: str = "local"       # key into the reduction registry
-    kernel: str = "auto"           # 'auto' | 'pallas' | 'jnp' | 'sorted'
+    kernel: str = "auto"           # 'auto'|'pallas'|'jnp'|'sorted'|'fused'
     axis_names: Tuple[str, ...] = ()   # mesh axes for distributed reductions
     count_dtype: str = "int32"     # dtype name (kept as str: hashable)
+    donate_state: bool = False     # donate the state arg of update/flush/
+                                   # ingest jits (in-place buffer reuse for
+                                   # exclusive-ownership ingestion loops)
 
     def __post_init__(self):
         if self.k <= 0 or self.tenants <= 0 or self.chunk <= 0:
@@ -80,12 +83,70 @@ class EngineConfig:
         Resolution goes through the PlanService on the ``combine`` op —
         the engine's hot path is the merge window, and one impl governs
         every match/COMBINE/query it dispatches (bitwise-identical across
-        impls, so this is purely a speed decision).
+        impls, so this is purely a speed decision). ``'fused'`` is a valid
+        answer: the sub-op wrappers (``combine_match``/``query``) degrade
+        it to the megakernel's internal sorted matcher, while the window-
+        level surfaces (flush, batched pairwise COMBINE) run the real
+        megakernel.
         """
         if self.kernel != "auto":
             return self.kernel
         from repro.plan import resolve_impl
         return resolve_impl("combine", self.k)
+
+    def resolved_flush_kernel(self) -> str:
+        """The impl of the window-level flush (``ops.ingest_window``).
+
+        An explicit ``kernel=`` pins it; ``'auto'`` resolves through the
+        plan's dedicated ``"flush"`` table — the one place a measured
+        plan routes the fused megakernel in where it won, independently
+        of the sub-op combine choice.
+        """
+        if self.kernel != "auto":
+            return self.kernel
+        from repro.plan import resolve_impl
+        return resolve_impl("flush", self.k)
+
+    def window_fn(self):
+        """The window-level flush every deferred merge in this engine uses.
+
+        Returns a ``(summary (B,k), window (B,W)) -> Summary`` callable
+        over ``kernels.ops.ingest_window`` under the resolved flush impl —
+        the megakernel when the plan (or an explicit ``kernel='fused'``)
+        says so, the separate-dispatch vmapped merge otherwise. Bitwise-
+        identical across impls either way.
+        """
+        import functools as _ft
+
+        from repro.core.spacesaving import Summary
+        from repro.kernels import ops as kops
+        ingest = _ft.partial(kops.ingest_window,
+                             impl=self.resolved_flush_kernel())
+
+        def window_fn(summary, window):
+            return Summary(*ingest(summary.items, summary.counts,
+                                   summary.errors, window))
+        return window_fn
+
+    def pair_fn(self):
+        """Batched pairwise COMBINE for the reduction tree, or None.
+
+        Non-None only when the flush resolved to the fused megakernel:
+        then every reduction round runs as one ``ss_ingest`` combine
+        launch per pair batch instead of the vmapped library COMBINE
+        (same bits). Returns ``(Summary, Summary) -> Summary`` on
+        batched (half, k) stacks.
+        """
+        if self.resolved_flush_kernel() != "fused":
+            return None
+        from repro.core.spacesaving import Summary
+        from repro.kernels import ops as kops
+
+        def pair_fn(s1, s2):
+            return Summary(*kops.combine_summaries(
+                s1.items, s1.counts, s1.errors,
+                s2.items, s2.counts, s2.errors, impl="fused"))
+        return pair_fn
 
     def match_fn(self):
         """The combine-match kernel every merge in this engine uses.

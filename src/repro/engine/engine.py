@@ -42,12 +42,12 @@ from repro.engine.state import (SketchState, empty_buffer, flushed_summary,
                                 init_state, replayed_summary)
 
 
-def _accepts_match_fn(fn) -> bool:
+def _accepts_kwarg(fn, name: str) -> bool:
     try:
         params = inspect.signature(fn).parameters
     except (TypeError, ValueError):
         return False
-    return ("match_fn" in params
+    return (name in params
             or any(p.kind is inspect.Parameter.VAR_KEYWORD
                    for p in params.values()))
 
@@ -59,17 +59,33 @@ class SketchEngine:
         self.config = config
         self._match_fn = config.match_fn()
         self._query_fn = config.query_fn()
+        # the window-level flush dispatch (possibly the fused megakernel)
+        # governs the deferred merge; replay mode keeps the per-chunk
+        # match_fn path (its scan granularity is a chunk, not a window)
+        self._window_fn = (config.window_fn()
+                           if config.flush_mode == "deferred" else None)
         # the engine-resolved kernel drives the COMBINEs inside the
         # reduction too (unified merge core); reductions registered with
-        # the legacy (stacked, axis_names) signature still work.
+        # the legacy (stacked, axis_names) signature still work. A fused
+        # flush additionally swaps the reduction's local tree rounds to
+        # the megakernel's batched pairwise COMBINE (same bits).
         reduce_fn = get_reduction(config.reduction)
-        if _accepts_match_fn(reduce_fn):
+        if _accepts_kwarg(reduce_fn, "match_fn"):
             reduce_fn = functools.partial(reduce_fn, match_fn=self._match_fn)
+        pair_fn = config.pair_fn()
+        if pair_fn is not None and _accepts_kwarg(reduce_fn, "pair_fn"):
+            reduce_fn = functools.partial(reduce_fn, pair_fn=pair_fn)
         self._reduce = reduce_fn
-        # jit once per engine; shapes re-trace as needed
-        self.update = jax.jit(self._update)
-        self.flush = jax.jit(self._flush)
-        self.ingest = jax.jit(self._ingest)
+        # jit once per engine; shapes re-trace as needed. donate_state
+        # aliases the state argument's buffers into the outputs of the
+        # three state-threading programs (update/flush/ingest) — only safe
+        # for callers that never reuse the passed-in state, which is why
+        # it is an explicit opt-in (StreamRuntime.feed's exclusive-
+        # ownership loop) and not the default.
+        donate = (0,) if config.donate_state else ()
+        self.update = jax.jit(self._update, donate_argnums=donate)
+        self.flush = jax.jit(self._flush, donate_argnums=donate)
+        self.ingest = jax.jit(self._ingest, donate_argnums=donate)
         self.merged = jax.jit(self._merged)
         self.absorb_histogram = jax.jit(self._absorb_histogram)
         self.estimate = jax.jit(self._estimate)
@@ -91,9 +107,10 @@ class SketchEngine:
 
     def _flush_view(self, state: SketchState) -> Summary:
         """The summaries as if the pending buffer were merged now (pure)."""
-        view = (flushed_summary if self.config.flush_mode == "deferred"
-                else replayed_summary)
-        return view(state, match_fn=self._match_fn)
+        if self.config.flush_mode == "deferred":
+            return flushed_summary(state, match_fn=self._match_fn,
+                                   window_fn=self._window_fn)
+        return replayed_summary(state, match_fn=self._match_fn)
 
     def _flush(self, state: SketchState) -> SketchState:
         return SketchState(summary=self._flush_view(state),

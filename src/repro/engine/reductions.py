@@ -3,7 +3,7 @@
 Every strategy has the signature
 
     fn(stacked: Summary, axis_names: tuple[str, ...], *,
-       match_fn=None) -> Summary
+       match_fn=None, pair_fn=None) -> Summary
 
 where ``stacked`` carries the tenant dim on axis 0 (each leaf is (B, k)) and
 ``axis_names`` are the mesh axes to reduce over *in addition to* the local
@@ -15,8 +15,11 @@ adjacent-pair COMBINE tree over the mesh-major rank order, which is what
 keeps them bitwise-interchangeable (``_allgather`` gathers outermost-first
 for the same reason). ``match_fn`` is the engine-resolved combine-match kernel
 (``kernels.ops.combine_match`` contract) driving every COMBINE the strategy
-performs; strategies registered without the keyword still work — the engine
-only passes it when the callable accepts it.
+performs; ``pair_fn`` (the ``reduce_summaries`` batched-pairwise contract)
+replaces the local tree's vmapped COMBINE round wholesale — the engine
+passes the fused megakernel's batched combine here when its flush resolved
+fused. Strategies registered without either keyword still work — the
+engine only passes what the callable accepts.
 
 Built-ins mirror the paper's study (core/parallel.py):
 
@@ -68,19 +71,22 @@ def reduction_names():
 # Built-ins
 # ---------------------------------------------------------------------------
 
-def _local(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
-    return reduce_summaries(stacked, match_fn=match_fn)
+def _local(stacked: Summary, axis_names, *, match_fn=None,
+           pair_fn=None) -> Summary:
+    return reduce_summaries(stacked, match_fn=match_fn, pair_fn=pair_fn)
 
 
-def _butterfly(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
-    s = reduce_summaries(stacked, match_fn=match_fn)
+def _butterfly(stacked: Summary, axis_names, *, match_fn=None,
+               pair_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn, pair_fn=pair_fn)
     for ax in axis_names:
         s = butterfly_combine(s, ax, match_fn=match_fn)
     return s
 
 
-def _allgather(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
-    s = reduce_summaries(stacked, match_fn=match_fn)
+def _allgather(stacked: Summary, axis_names, *, match_fn=None,
+               pair_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn, pair_fn=pair_fn)
     if axis_names:
         # all_gather stacks one dim per axis in the order given; reversing
         # the innermost-first convention gathers outermost-first, i.e. the
@@ -90,8 +96,9 @@ def _allgather(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
     return s
 
 
-def _hierarchical(stacked: Summary, axis_names, *, match_fn=None) -> Summary:
-    s = reduce_summaries(stacked, match_fn=match_fn)
+def _hierarchical(stacked: Summary, axis_names, *, match_fn=None,
+                  pair_fn=None) -> Summary:
+    s = reduce_summaries(stacked, match_fn=match_fn, pair_fn=pair_fn)
     if axis_names:
         inner = axis_names[0]
         outer = axis_names[1] if len(axis_names) > 1 else None

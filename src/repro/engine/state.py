@@ -88,7 +88,8 @@ def empty_buffer(state: SketchState) -> jax.Array:
     return jnp.full_like(state.buffer, EMPTY)
 
 
-def flushed_summary(state: SketchState, match_fn=None) -> Summary:
+def flushed_summary(state: SketchState, match_fn=None,
+                    window_fn=None) -> Summary:
     """Deferred merge: each tenant's whole pending window in ONE merge.
 
     Equals ``update_chunk(summary_b, buffer_b.reshape(T·C))`` exactly: the
@@ -99,9 +100,17 @@ def flushed_summary(state: SketchState, match_fn=None) -> Summary:
     once per chunk) but every Space Saving bound still holds — the window
     histogram is exact, i.e. a zero-error summary, so this is COMBINE with
     m₂ = 0 (Cafaro et al.).
+
+    ``window_fn`` (a ``(batched Summary, (B, T·C) window) -> Summary``
+    callable, contract of ``EngineConfig.window_fn``) replaces the
+    vmapped merge wholesale — the engine passes its resolved window-level
+    dispatch (possibly the fused megakernel) here; ``match_fn`` then goes
+    unused. Both paths are bitwise-identical.
     """
     b, t, c = state.buffer.shape
     window = state.buffer.reshape(b, t * c)
+    if window_fn is not None:
+        return window_fn(state.summary, window)
     return jax.vmap(
         lambda s, w: update_chunk(s, w, match_fn=match_fn))(
             state.summary, window)

@@ -15,6 +15,13 @@ Dispatch policy (``impl``):
                    large k off-TPU. Requires distinct valid summary items
                    (true of every well-formed summary). Engine code selects
                    this centrally via EngineConfig.kernel (see repro.engine).
+  * ``'fused'``  — the whole-merge megakernel (kernels/ss_ingest.py): only
+                   a real dispatch target for the window-level ops
+                   (``ingest_window`` / ``combine_summaries``); at the
+                   sub-op surfaces (``match_weights``/``combine_match``/
+                   ``query``) it degrades to ``'sorted'`` — the matcher the
+                   megakernel runs internally — so a fused-configured
+                   engine is well-defined on every path it dispatches.
 
 All wrappers pad inputs to block multiples (EMPTY ids / zero weights are
 match-neutral) and strip the padding from the outputs. ``combine_match`` is
@@ -22,6 +29,8 @@ the unified matcher behind every merge path (chunk update, histogram absorb
 and summary-vs-summary COMBINE — see core/spacesaving.py:absorb_pool).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -38,17 +47,40 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# -- memoized plan resolution -------------------------------------------------
+# resolve_impl sits on the per-dispatch hot path (every traced 'auto' pays
+# it), and each uncached call costs a plan-cache stat + table lookup. The
+# memo holds the collapsed (op, k) → impl answer and is invalidated by the
+# PlanService generation counter, which bumps on install()/clear() — i.e.
+# whenever the answer could legitimately change in-process. (A plan-cache
+# FILE swapped underneath a running process is picked up on the next
+# clear(); the tune CLI clears after publishing, so the normal re-tune flow
+# invalidates correctly.)
+
+_resolve_cache: dict = {}      # (op, k) -> impl
+_resolve_gen: int | None = None
+
+
 def resolve_impl(op: str, k: int) -> str:
     """Collapse 'auto' for one op at counter budget k via the active plan.
 
-    Thin re-export of :func:`repro.plan.resolve_impl` (imported lazily so
-    the kernel stack never pulls the plan subsystem unless an 'auto' is
-    actually dispatched) — THE single auto-routing point; the former
-    inline ``k >= SORTED_MIN_K`` rules live on only as the plan's
+    Memoizing wrapper over :func:`repro.plan.resolve_impl` (imported
+    lazily so the kernel stack never pulls the plan subsystem unless an
+    'auto' is actually dispatched) — THE single auto-routing point; the
+    former inline ``k >= SORTED_MIN_K`` rules live on only as the plan's
     zero-measurement static fallback (``repro.plan.static_impl``).
     """
-    from repro.plan import resolve_impl as _resolve
-    return _resolve(op, k)
+    global _resolve_gen
+    from repro.plan import service as _svc
+    gen = _svc.generation()
+    if gen != _resolve_gen:
+        _resolve_cache.clear()
+        _resolve_gen = gen
+    key = (op, int(k))
+    impl = _resolve_cache.get(key)
+    if impl is None:
+        impl = _resolve_cache[key] = _svc.resolve_impl(op, k)
+    return impl
 
 
 def _pad1(a: jax.Array, mult: int, fill) -> jax.Array:
@@ -63,6 +95,8 @@ def match_weights(s_items: jax.Array, h_items: jax.Array, h_weights: jax.Array,
     """See kernels/ss_match.py. Returns (add_w (k,), matched (c,) bool)."""
     if impl == "auto":
         impl = resolve_impl("update", s_items.shape[0])
+    if impl == "fused":
+        impl = "sorted"      # the megakernel's internal matcher
     if impl == "sorted":
         return _ref.match_weights_sorted(s_items, h_items, h_weights)
     if impl == "jnp":
@@ -94,6 +128,8 @@ def combine_match(s_items: jax.Array, c_items: jax.Array,
     """
     if impl == "auto":
         impl = resolve_impl("combine", s_items.shape[0])
+    if impl == "fused":
+        impl = "sorted"      # the megakernel's internal matcher
     if impl not in ("sorted", "jnp"):
         # the Pallas kernel contracts in int32; wider count dtypes would
         # silently truncate, so route them to the (exact) sorted merge-join.
@@ -132,6 +168,8 @@ def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
     """
     if impl == "auto":
         impl = resolve_impl("query", s_items.shape[0])
+    if impl == "fused":
+        impl = "sorted"      # the megakernel's internal matcher
     if impl not in ("sorted", "jnp"):
         wide = any(jnp.dtype(a.dtype).itemsize > 4
                    for a in (s_counts, s_errors))
@@ -152,3 +190,85 @@ def query(s_items, s_counts, s_errors, queries, *, impl: str = "auto",
         sp, cp, ep, qp, block_k=bk, block_q=bq, interpret=not _on_tpu())
     return (f_hat[:q].astype(s_counts.dtype), eps[:q].astype(s_errors.dtype),
             mon[:q])
+
+
+# -- window-level ops: the fused megakernel's dispatch surfaces ---------------
+
+def _batched(*channels):
+    """Promote (n,) channels to (1, n); returns (arrays, was_unbatched)."""
+    unbatched = channels[0].ndim == 1
+    if unbatched:
+        channels = tuple(a[None] for a in channels)
+    return channels, unbatched
+
+
+def ingest_window(s_items: jax.Array, s_counts: jax.Array,
+                  s_errors: jax.Array, window: jax.Array, *,
+                  impl: str = "auto"):
+    """Flush a pending window into batched summaries — the engine's merge.
+
+    ``s_*`` are (B, k) summary channels, ``window`` is the (B, W) pending
+    stream window (EMPTY-padded; W = T·C for a deferred engine buffer).
+    Unbatched (k,)/(W,) inputs are promoted and squeezed back. Returns the
+    updated ``(items, counts, errors)`` triple.
+
+    Every impl computes ``update_chunk(summary_b, window_b)`` exactly —
+    bitwise-identical across impls:
+
+      * ``'fused'`` — the ss_ingest megakernel: one Pallas launch over the
+        tenant grid, the whole sort/match/absorb/top_k chain VMEM-resident
+        (interpret-evaluated off-TPU).
+      * ``'pallas'``/``'jnp'``/``'sorted'`` — the separate-dispatch path:
+        vmapped ``update_chunk`` with ``combine_match`` forced to that
+        impl (what the engine flush always did before the megakernel).
+
+    ``'auto'`` resolves through the plan's ``"flush"`` table — fused is
+    only ever planned where a measured probe says it wins (static plans
+    never pick it).
+    """
+    if impl == "auto":
+        impl = resolve_impl("flush", s_items.shape[-1])
+    (si, sc, se, w), unbatched = _batched(s_items, s_counts, s_errors,
+                                          window)
+    if impl == "fused":
+        from repro.kernels.ss_ingest import fused_ingest_pallas
+        out = fused_ingest_pallas(si, sc, se, w, interpret=not _on_tpu())
+    else:
+        from repro.core.spacesaving import Summary, update_chunk
+        match = functools.partial(combine_match, impl=impl)
+        res = jax.vmap(lambda s, win: update_chunk(
+            Summary(*s), win, match_fn=match))((si, sc, se), w)
+        out = (res.items, res.counts, res.errors)
+    return tuple(a[0] for a in out) if unbatched else out
+
+
+def combine_summaries(s1_items: jax.Array, s1_counts: jax.Array,
+                      s1_errors: jax.Array, s2_items: jax.Array,
+                      s2_counts: jax.Array, s2_errors: jax.Array, *,
+                      impl: str = "auto"):
+    """Batched pairwise COMBINE — one reduction-tree round, dispatched.
+
+    All six channels are (B, k) (unbatched (k,) promoted). Returns the
+    merged ``(items, counts, errors)``. ``'fused'`` runs the whole
+    match + offsets + top_k chain as one ss_ingest launch per pair; other
+    impls evaluate the library ``combine`` with ``combine_match`` forced
+    to that impl — bitwise-identical either way. ``'auto'`` resolves
+    through the plan's ``"combine"`` table.
+    """
+    if impl == "auto":
+        impl = resolve_impl("combine", s1_items.shape[-1])
+    (a_i, a_c, a_e, b_i, b_c, b_e), unbatched = _batched(
+        s1_items, s1_counts, s1_errors, s2_items, s2_counts, s2_errors)
+    if impl == "fused":
+        from repro.kernels.ss_ingest import fused_combine_pallas
+        out = fused_combine_pallas(a_i, a_c, a_e, b_i, b_c, b_e,
+                                   interpret=not _on_tpu())
+    else:
+        from repro.core.combine import combine
+        from repro.core.spacesaving import Summary
+        match = functools.partial(combine_match, impl=impl)
+        res = jax.vmap(lambda s1, s2: combine(
+            Summary(*s1), Summary(*s2), match_fn=match))(
+                (a_i, a_c, a_e), (b_i, b_c, b_e))
+        out = (res.items, res.counts, res.errors)
+    return tuple(a[0] for a in out) if unbatched else out

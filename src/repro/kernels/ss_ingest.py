@@ -1,0 +1,139 @@
+"""Pallas fused-ingestion megakernel: the whole flush in ONE launch.
+
+The engine's deferred flush is a chain of XLA dispatches per tenant window
+— sort + segment-reduce (chunk_histogram), combine-match, absorb offsets,
+top_k prune — and each stage round-trips the (T·C) window and the three
+(k,) summary channels through HBM. This kernel runs the entire chain for
+one tenant inside a single Pallas program: the grid is the tenant batch
+(one program per tenant), each program's block is that tenant's full
+(k,) summary channels plus its (W,) window, all VMEM-resident, and the
+intermediate histogram / match / pool arrays never leave the core.
+
+Two entry points, mirroring the two merge surfaces of the engine:
+
+  * :func:`fused_ingest_pallas`  — flush: (B, k)×3 summary channels +
+    (B, W) pending window → updated (B, k)×3.
+  * :func:`fused_combine_pallas` — summary-vs-summary COMBINE: two
+    (B, k)×3 summaries → the merged (B, k)×3 (the batched pairwise step
+    of the reduction tree).
+
+Bitwise contract: the kernel body *is* the library merge —
+``core.spacesaving.update_chunk`` / ``core.combine.combine`` evaluated on
+the VMEM blocks with the sorted merge-join matcher — so fused ≡ unfused
+holds by construction, not by parallel reimplementation (the equivalence
+matrix in tests/test_kernels.py pins it anyway).
+
+Channel layout follows ss_combine.py: counts and errors ride as two
+separate value channels of the same (k,)-shaped block, int-typed in the
+caller's count dtype (the body computes in native dtype — no int32
+contraction — so wide count dtypes are safe here, unlike the tiled
+combine kernel).
+
+Lowering status: the body contains sort / scatter-add / top_k, which the
+interpret-mode evaluator (and any backend that can lower them) executes
+directly. On TPU hardware Mosaic cannot lower gather/scatter today, so
+``"fused"`` is never a *static* plan choice (``plan.static_impl`` never
+returns it) — only a measured plan that actually probed it on the running
+backend routes here. That is the paper's Xeon-vs-Phi discipline: an impl
+is used where it was measured to win, nowhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+from repro.core.combine import combine
+from repro.core.spacesaving import Summary, update_chunk
+from repro.kernels.ref import combine_match_sorted
+
+EMPTY = -1
+
+
+def _row(ref) -> jax.Array:
+    """One program's (1, n) block as an (n,) array."""
+    return ref[...].reshape(-1)
+
+
+def _ingest_kernel(si_ref, sc_ref, se_ref, w_ref, oi_ref, oc_ref, oe_ref):
+    s = Summary(items=_row(si_ref), counts=_row(sc_ref),
+                errors=_row(se_ref))
+    out = update_chunk(s, _row(w_ref), match_fn=combine_match_sorted)
+    oi_ref[...] = out.items.reshape(1, -1)
+    oc_ref[...] = out.counts.reshape(1, -1)
+    oe_ref[...] = out.errors.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_ingest_pallas(s_items: jax.Array, s_counts: jax.Array,
+                        s_errors: jax.Array, window: jax.Array, *,
+                        interpret: bool = False):
+    """Fused flush: histogram + match + absorb + top_k, one launch.
+
+    Shapes: ``s_items`` (B, k) int32, ``s_counts``/``s_errors`` (B, k)
+    count dtype, ``window`` (B, W) int32 (EMPTY-padded). Returns the
+    updated ``(items, counts, errors)`` triple, same shapes/dtypes.
+    """
+    b, k = s_items.shape
+    w = window.shape[-1]
+    assert window.shape[0] == b, (window.shape, s_items.shape)
+    dt = s_counts.dtype
+
+    row_k = pl.BlockSpec((1, k), lambda i: (i, 0))
+    row_w = pl.BlockSpec((1, w), lambda i: (i, 0))
+    oi, oc, oe = pl.pallas_call(
+        _ingest_kernel,
+        grid=(b,),
+        in_specs=[row_k, row_k, row_k, row_w],
+        out_specs=[row_k, row_k, row_k],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), s_items.dtype),
+            jax.ShapeDtypeStruct((b, k), dt),
+            jax.ShapeDtypeStruct((b, k), dt),
+        ],
+        interpret=interpret,
+    )(s_items, s_counts, s_errors, window)
+    return oi, oc, oe
+
+
+def _combine_kernel(ai_ref, ac_ref, ae_ref, bi_ref, bc_ref, be_ref,
+                    oi_ref, oc_ref, oe_ref):
+    s1 = Summary(items=_row(ai_ref), counts=_row(ac_ref),
+                 errors=_row(ae_ref))
+    s2 = Summary(items=_row(bi_ref), counts=_row(bc_ref),
+                 errors=_row(be_ref))
+    out = combine(s1, s2, match_fn=combine_match_sorted)
+    oi_ref[...] = out.items.reshape(1, -1)
+    oc_ref[...] = out.counts.reshape(1, -1)
+    oe_ref[...] = out.errors.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_combine_pallas(s1_items: jax.Array, s1_counts: jax.Array,
+                         s1_errors: jax.Array, s2_items: jax.Array,
+                         s2_counts: jax.Array, s2_errors: jax.Array, *,
+                         interpret: bool = False):
+    """Fused batched pairwise COMBINE: match + offsets + top_k, one launch.
+
+    All six channels are (B, k); returns the merged (B, k)×3 triple —
+    the vmapped-``combine`` step of ``reduce_summaries``, as one kernel.
+    """
+    b, k = s1_items.shape
+    assert s2_items.shape == (b, k), (s1_items.shape, s2_items.shape)
+    dt = s1_counts.dtype
+
+    row_k = pl.BlockSpec((1, k), lambda i: (i, 0))
+    oi, oc, oe = pl.pallas_call(
+        _combine_kernel,
+        grid=(b,),
+        in_specs=[row_k] * 6,
+        out_specs=[row_k] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), s1_items.dtype),
+            jax.ShapeDtypeStruct((b, k), dt),
+            jax.ShapeDtypeStruct((b, k), dt),
+        ],
+        interpret=interpret,
+    )(s1_items, s1_counts, s1_errors, s2_items, s2_counts, s2_errors)
+    return oi, oc, oe

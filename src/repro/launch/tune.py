@@ -41,13 +41,29 @@ from pathlib import Path
 
 # the ops probed by default: the production dispatch surface. 'combine'
 # drives every engine merge (ingest flushes, histogram absorbs, reductions
-# — the unified merge core) and 'query' every read. 'update'
-# (ops.match_weights) is a public kernel surface with no in-tree 'auto'
-# dispatcher since the merge unification; probe it on demand via
-# --ops update,combine,query — its plan table still resolves (static
-# fallback) for external callers.
-OPS = ("combine", "query")
+# — the unified merge core), 'query' every read, and 'flush' the
+# window-level merge (ops.ingest_window — the whole deferred-flush
+# dispatch), where the fused megakernel competes against the
+# separate-dispatch impls. 'update' (ops.match_weights) is a public kernel
+# surface with no in-tree 'auto' dispatcher since the merge unification;
+# probe it on demand via --ops update,combine,query,flush — its plan table
+# still resolves (static fallback) for external callers.
+OPS = ("combine", "query", "flush")
 STRATEGIES = ("butterfly", "allgather", "hierarchical")
+
+
+def _impls_for_op(op: str, impls) -> list[str]:
+    """The impl list probed/gated at one op's dispatch surface.
+
+    The fused megakernel only exists at the window-level 'flush' surface,
+    and it is ALWAYS probed there (regardless of --kernels): fused can
+    only ever reach a plan through a measurement, so the flush sweep is
+    where that measurement must happen — win or lose, the number lands in
+    BENCH_plan.json and the plan routes around a losing fused path.
+    """
+    if op == "flush":
+        return list(dict.fromkeys([*impls, "fused"]))
+    return list(impls)
 
 
 def _midpoints(ks) -> list[int]:
@@ -115,7 +131,7 @@ def _bitwise_gate(plan, impls, emit, seed: int = 0, ops=OPS) -> dict:
     from repro.plan.probe import _probe_inputs
 
     entry = {"update": kops.match_weights, "combine": kops.combine_match,
-             "query": kops.query}
+             "query": kops.query, "flush": kops.ingest_window}
 
     def _same(a, b):
         if a is None or b is None:
@@ -135,14 +151,16 @@ def _bitwise_gate(plan, impls, emit, seed: int = 0, ops=OPS) -> dict:
         for op in ops:
             args = _probe_inputs(op, 256, 512, jnp.dtype("int32"), seed)
             ref = entry[op](*args, impl="auto")
-            for impl in impls:
+            for impl in _impls_for_op(op, impls):
                 out = entry[op](*args, impl=impl)
                 key = f"{op}:{impl}"
                 results[key] = all(_same(a, b) for a, b in zip(ref, out))
                 emit(f"bitwise_{op}_auto_vs_{impl}",
                      str(results[key]).lower())
         ref_snap = snap("auto")
-        for impl in impls:
+        engine_impls = (_impls_for_op("flush", impls) if "flush" in ops
+                        else list(impls))
+        for impl in engine_impls:
             s = snap(impl)
             same = all(_same(a, b)
                        for a, b in zip(ref_snap.summary, s.summary))
@@ -156,14 +174,20 @@ def resolution_timing(emit, *, reps: int = 200,
                       cache_dir: str | None = None) -> dict:
     """Time plan resolution: cold cache load + warm per-op resolve calls.
 
-    This is the overhead every traced 'auto' dispatch pays (a cache stat
-    plus a table lookup). THE one implementation of the ``plan_resolution``
-    metric: it rides into BENCH_plan.json here and benchmarks/run.py
-    imports it for its CSV, so the number means the same thing in both
-    trajectories. ``cache_dir`` points resolution at a specific plan cache
-    (the tune CLI passes its --cache-dir so the measurement covers the
-    plan this run just produced, not whatever $REPRO_PLAN_CACHE holds).
+    This is the overhead every traced 'auto' dispatch pays. THE one
+    implementation of the ``plan_resolution`` metric: it rides into
+    BENCH_plan.json here and benchmarks/run.py imports it for its CSV, so
+    the number means the same thing in both trajectories. Two layers per
+    op — ``plan_resolution_<op>`` is the UN-memoized PlanService path (a
+    cache stat + table lookup per call: the before picture, and the cost
+    of the first dispatch), ``plan_resolution_<op>_memo`` is the
+    ``kernels.ops.resolve_impl`` memo hit every subsequent dispatch
+    actually pays (the after picture). ``cache_dir`` points resolution at
+    a specific plan cache (the tune CLI passes its --cache-dir so the
+    measurement covers the plan this run just produced, not whatever
+    $REPRO_PLAN_CACHE holds).
     """
+    from repro.kernels import ops as kops
     from repro.plan import active_plan, clear, resolve_impl
 
     prev = os.environ.get("REPRO_PLAN_CACHE")
@@ -182,6 +206,15 @@ def resolution_timing(emit, *, reps: int = 200,
             timing[f"resolve_{op}_s"] = (time.perf_counter() - t0) / reps
             emit(f"plan_resolution_{op}",
                  f"{timing[f'resolve_{op}_s']:.3e}", f"source={source}")
+            kops.resolve_impl(op, 1024)       # prime the memo
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                kops.resolve_impl(op, 1024)
+            timing[f"resolve_{op}_memo_s"] = \
+                (time.perf_counter() - t0) / reps
+            emit(f"plan_resolution_{op}_memo",
+                 f"{timing[f'resolve_{op}_memo_s']:.3e}",
+                 f"source={source}")
         emit("plan_resolution_cold_load", f"{cold_s:.3e}")
     finally:
         if cache_dir is not None:
@@ -296,9 +329,13 @@ def main(argv=None) -> int:
     emit("fingerprint", fp)
 
     # -- probe + model -------------------------------------------------------
-    rows = probe_kernels(ops=ops, impls=impls, ks=ks, cs=cs,
-                         dtype=args.dtype, repeat=args.repeat,
-                         seed=args.seed, emit=emit)
+    # per-op sweeps: the flush surface always probes the fused megakernel
+    # on top of --kernels (see _impls_for_op)
+    rows = []
+    for op in ops:
+        rows += probe_kernels(ops=(op,), impls=_impls_for_op(op, impls),
+                              ks=ks, cs=cs, dtype=args.dtype,
+                              repeat=args.repeat, seed=args.seed, emit=emit)
     # production queries run at small padded batches, far below the ingest
     # chunk sizes of the main grid — probe those cells too (every k, so
     # the query grid stays complete when the small columns are folded in),
@@ -319,9 +356,13 @@ def main(argv=None) -> int:
 
     # held-out validation: probe geometric-midpoint budgets and compare
     # against the model's interpolation (the BENCH-tracked model error)
-    held_out = probe_kernels(ops=ops, impls=impls, ks=_midpoints(ks),
-                             cs=[chunk], dtype=args.dtype,
-                             repeat=args.repeat, seed=args.seed + 1)
+    held_out = []
+    for op in ops:
+        held_out += probe_kernels(ops=(op,),
+                                  impls=_impls_for_op(op, impls),
+                                  ks=_midpoints(ks), cs=[chunk],
+                                  dtype=args.dtype, repeat=args.repeat,
+                                  seed=args.seed + 1)
     validation = model.validate(held_out)
     max_err = max((v["rel_err"] for v in validation), default=0.0)
     emit("model_max_rel_err", f"{max_err:.3f}",
@@ -371,7 +412,7 @@ def main(argv=None) -> int:
     from repro.kernels import ops as kops
     from repro.plan.probe import _probe_inputs
     entry = {"update": kops.match_weights, "combine": kops.combine_match,
-             "query": kops.query}
+             "query": kops.query, "flush": kops.ingest_window}
     for op in ops:
         for k in ks:
             planned = kernels[op][k]
@@ -384,7 +425,8 @@ def main(argv=None) -> int:
             # so the "never beyond tolerance of the worst static config"
             # bound holds even when it wasn't in the probed impl list.
             static = static_impl(op, k)
-            cell_impls = list(dict.fromkeys([*impls, static]))
+            cell_impls = list(dict.fromkeys(
+                [*_impls_for_op(op, impls), static]))
             fresh = {impl: timeit(
                 jax.jit(functools.partial(entry[op], impl=impl)),
                 *probe_args, repeat=args.repeat)

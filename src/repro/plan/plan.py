@@ -30,13 +30,19 @@ from typing import Mapping
 
 PLAN_FORMAT = 1
 
-#: ops with a dispatchable kernel choice (kernels/ops.py wrappers)
-PLAN_OPS = ("update", "combine", "query")
+#: ops with a dispatchable kernel choice (kernels/ops.py wrappers);
+#: 'flush' is the window-level merge (ops.ingest_window — the engine's
+#: whole deferred-flush dispatch), where the fused megakernel competes
+#: against the separate-dispatch impls
+PLAN_OPS = ("update", "combine", "query", "flush")
 
 #: concrete impls a plan may route to (kernels/ops.py dispatch targets);
 #: anything else would fall through ops.py's dispatch to the Pallas branch
-#: silently, so plans validate their tables against this up front
-PLAN_IMPLS = ("pallas", "jnp", "sorted")
+#: silently, so plans validate their tables against this up front.
+#: 'fused' (kernels/ss_ingest.py) is measurement-only: static_impl never
+#: returns it — it reaches a table exclusively through a probe that timed
+#: it on the running backend (the paper's Xeon-vs-Phi discipline).
+PLAN_IMPLS = ("pallas", "jnp", "sorted", "fused")
 
 # the dense k×c match is near-quadratic in k; below this counter budget it
 # beats sort+searchsorted on CPU (measured in BENCH_sketch.json). This is
@@ -57,7 +63,11 @@ def static_impl(op: str, k: int, *, on_tpu: bool | None = None) -> str:
     jnp path wins at small k and the sorted merge-join past SORTED_MIN_K
     for combine/query. ``update`` (match_weights) always takes the dense
     jnp path off-TPU: its histogram side is small enough that the sort
-    never paid for itself in the seed measurements.
+    never paid for itself in the seed measurements. ``flush`` (the
+    window-level merge) follows combine's rule — it is a combine-match
+    dispatched over the window histogram — and NEVER statically picks the
+    fused megakernel: its body contains sort/scatter/top_k, which only an
+    actual measurement can certify on a given backend.
     """
     if op not in PLAN_OPS:
         raise ValueError(f"op {op!r} not in {PLAN_OPS}")

@@ -77,6 +77,15 @@ def _probe_inputs(op: str, k: int, c: int, dtype, seed: int = 0):
         queries = jnp.asarray(rng.integers(0, universe, size=c)
                               .astype(np.int32))
         return (s_items, s_counts, s_errors, queries)
+    if op == "flush":
+        # the window-level merge sees the RAW pending window — duplicates
+        # and all (the histogram compression is part of what it does), so
+        # the probe stream is zipf-skewed like real traffic, not a
+        # distinct-id histogram
+        window = jnp.asarray(
+            np.minimum(rng.zipf(1.3, size=c), universe - 1)
+            .astype(np.int32))
+        return (s_items, s_counts, s_errors, window)
     # histogram side: exactly c distinct ids (combine's contract — both
     # absorb_pool and summary-vs-summary COMBINE feed distinct-id pools)
     h_items = jnp.asarray(rng.choice(universe, size=c,
@@ -108,7 +117,7 @@ def probe_kernels(*, ops=("update", "combine", "query"),
     from repro.kernels import ops as kops
 
     entry = {"update": kops.match_weights, "combine": kops.combine_match,
-             "query": kops.query}
+             "query": kops.query, "flush": kops.ingest_window}
     rows = []
     np_dtype = jnp.dtype(dtype)
     for op in ops:

@@ -34,12 +34,24 @@ from repro.plan.plan import ExecutionPlan, static_plan
 
 _installed: ExecutionPlan | None = None
 _file_cache: dict = {}     # path -> (mtime_ns, ExecutionPlan)
+_generation = 0            # bumps whenever resolution answers may change
+
+
+def generation() -> int:
+    """Monotonic counter of plan-state changes (install/clear bumps it).
+
+    Downstream memos of resolution answers (``kernels.ops.resolve_impl``)
+    key their validity on this: same generation → the collapsed
+    (op, k) → impl answer cannot have changed in-process.
+    """
+    return _generation
 
 
 def install(plan: ExecutionPlan | None) -> None:
     """Pin ``plan`` as the active plan for this process (None clears)."""
-    global _installed
+    global _installed, _generation
     _installed = plan
+    _generation += 1
 
 
 def clear() -> None:

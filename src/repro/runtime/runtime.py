@@ -123,6 +123,11 @@ class StreamRuntime:
 
         if self.shards == 1:
             self._ingest_blocks_fn = jax.jit(eng._ingest)
+            # feed()'s loop variant: the state arg is donated, so XLA
+            # aliases the (B, T, C) buffer and summary channels in place
+            # instead of copying them every step — safe only because the
+            # loop-internal states are exclusively owned by feed().
+            self._feed_ingest_fn = jax.jit(eng._ingest, donate_argnums=(0,))
             self._merged_fn = jax.jit(eng._merged)
             return
 
@@ -161,6 +166,8 @@ class StreamRuntime:
                                n=n)
 
         self._ingest_blocks_fn = jax.jit(ingest_blocks)
+        # donated twin for feed()'s loop (see single-shard branch)
+        self._feed_ingest_fn = jax.jit(ingest_blocks, donate_argnums=(0,))
 
         def shard_merged(summary, buffer, n, fill):
             st = SketchState(summary=summary, buffer=buffer, fill=fill, n=n)
@@ -246,15 +253,26 @@ class StreamRuntime:
         Each element is one (N,)-shaped host array (numpy); it is
         decomposed on host, staged onto the mesh ``feed_depth`` transfers
         ahead of the compute, and ingested in arrival order.
+
+        After the first step the loop threads its state through the
+        DONATED ingest program: every intermediate state is exclusively
+        owned here, so its (B, T, C) buffer and summary channels are
+        aliased in place instead of round-tripping a copy per step — the
+        staged host→device transfers overlap pure compute, not compute
+        plus a state copy. The caller's ``state`` argument itself is
+        never donated (the first step uses the non-donating program), so
+        it stays valid after feed() returns.
         """
         chunk = self.config.engine.chunk
         staged = (host_blocks(b, self.workers, chunk) for b in blocks)
         dev = DeviceFeed(staged, sharding=self.block_sharding(),
                          depth=self.config.feed_depth)
+        ingest = self._ingest_blocks_fn
         for block in dev:
             if block.shape[-1] == 0:    # empty host block → nothing pending
                 continue
-            state = self._ingest_blocks_fn(state, block)
+            state = ingest(state, block)
+            ingest = self._feed_ingest_fn
         return state
 
     # -- reads -----------------------------------------------------------------

@@ -42,7 +42,10 @@ from repro.core.spacesaving import (EMPTY, Summary, bounded_estimates,
                                     prune, sort_summary)
 from repro.service.snapshot import QuerySnapshot
 
-IMPLS = ("auto", "pallas", "jnp", "sorted")
+IMPLS = ("auto", "pallas", "jnp", "sorted", "fused")
+# 'fused' is the engine's megakernel impl; at the query surface
+# kernels.ops.query degrades it to the megakernel's internal sorted
+# matcher, so a frontend built from a fused engine is well-defined.
 
 
 @functools.lru_cache(maxsize=None)

@@ -77,3 +77,54 @@ def test_auto_impl_dispatches_without_error(rng):
     aw, m = ops.match_weights(si, hi, hw, impl="auto")
     aw_r, _ = match_weights_ref(si, hi, hw)
     np.testing.assert_array_equal(np.asarray(aw), np.asarray(aw_r))
+
+
+# ---------------------------------------------------------------------------
+# Fused ingestion megakernel (ss_ingest) vs the unfused window dispatch
+# ---------------------------------------------------------------------------
+
+def _mk_summary_batch(rng, b, k, fill):
+    n_fill = int(k * fill)
+    items = np.full((b, k), -1, np.int32)
+    counts = np.zeros((b, k), np.int32)
+    for i in range(b):
+        items[i, :n_fill] = rng.choice(8 * k, size=n_fill, replace=False)
+        counts[i, :n_fill] = np.sort(
+            rng.integers(1, 1000, size=n_fill))[::-1]
+    errors = counts // 4
+    return tuple(jnp.asarray(a) for a in (items, counts, errors))
+
+
+@pytest.mark.parametrize("b,k,w", [(1, 64, 32), (3, 128, 256), (2, 300, 100)])
+def test_fused_ingest_kernel_vs_unfused(rng, b, k, w):
+    from repro.kernels.ss_ingest import fused_ingest_pallas
+    si, sc, se = _mk_summary_batch(rng, b, k, fill=0.6)
+    window = jnp.asarray(
+        np.minimum(rng.zipf(1.2, size=(b, w)), 8 * k - 1).astype(np.int32))
+    out_f = fused_ingest_pallas(si, sc, se, window, interpret=True)
+    out_r = ops.ingest_window(si, sc, se, window, impl="sorted")
+    for name, a, c in zip(("items", "counts", "errors"), out_f, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                      err_msg=f"b={b} k={k} w={w} ch={name}")
+
+
+@pytest.mark.parametrize("b,k", [(1, 64), (4, 256)])
+def test_fused_combine_kernel_vs_unfused(rng, b, k):
+    from repro.kernels.ss_ingest import fused_combine_pallas
+    s1 = _mk_summary_batch(rng, b, k, fill=1.0)
+    s2 = _mk_summary_batch(rng, b, k, fill=0.3)
+    out_f = fused_combine_pallas(*s1, *s2, interpret=True)
+    out_r = ops.combine_summaries(*s1, *s2, impl="sorted")
+    for name, a, c in zip(("items", "counts", "errors"), out_f, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                      err_msg=f"b={b} k={k} ch={name}")
+
+
+def test_fused_ingest_empty_window_is_top_k_identity(rng):
+    """An all-EMPTY window must leave the summary's occupied set intact."""
+    si, sc, se = _mk_summary_batch(rng, 2, 128, fill=0.5)
+    window = jnp.full((2, 64), -1, jnp.int32)
+    out = ops.ingest_window(si, sc, se, window, impl="fused")
+    ref = ops.ingest_window(si, sc, se, window, impl="sorted")
+    for a, c in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))

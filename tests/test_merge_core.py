@@ -11,7 +11,11 @@ Covers the contract the engine relies on (DESIGN.md §6.3):
   * butterfly_combine falls back to allgather on non-power-of-two axes.
 
 ``REPRO_TEST_KERNEL`` restricts the impl sweep (CI's kernel-matrix leg runs
-one impl per job); unset, all three are exercised.
+one impl per job); unset, all four are exercised.  'fused' is the window-
+level Pallas megakernel: at the sub-op surfaces (combine_match) it degrades
+to 'sorted' by contract, and its real dispatch — ``ingest_window`` /
+``combine_summaries`` — is covered by the bitwise state matrix at the
+bottom of this file.
 """
 import functools
 import os
@@ -29,7 +33,7 @@ from repro.engine import EngineConfig, SketchEngine
 from repro.kernels import ops
 from repro.kernels.ref import combine_match_ref
 
-ALL_IMPLS = ("jnp", "sorted", "pallas")
+ALL_IMPLS = ("jnp", "sorted", "pallas", "fused")
 IMPLS = ((os.environ["REPRO_TEST_KERNEL"],)
          if os.environ.get("REPRO_TEST_KERNEL") else ALL_IMPLS)
 
@@ -177,7 +181,7 @@ def test_engine_resolved_kernel_reaches_reduction(monkeypatch):
     assert seen and set(seen) == {"sorted"}, seen
 
 
-@pytest.mark.parametrize("kernel", ["jnp", "sorted", "pallas"])
+@pytest.mark.parametrize("kernel", ["jnp", "sorted", "pallas", "fused"])
 def test_engine_merged_impls_agree(kernel):
     if kernel not in IMPLS and kernel != "jnp":
         pytest.skip(f"impl sweep restricted to {IMPLS}")
@@ -208,6 +212,60 @@ def test_legacy_reduction_signature_still_works():
         engine.merged(st)                     # must not raise
     finally:
         R._REGISTRY.pop("legacy_probe", None)
+
+
+# ---------------------------------------------------------------------------
+# Fused megakernel vs unfused window dispatch: bitwise across the state
+# matrix (k × buffer fill × window shape) at BOTH window-level surfaces
+# ---------------------------------------------------------------------------
+
+def _batched_summary(k, fill, seed, b=2):
+    rows = [_summary_at_fill(k, fill, seed=seed + i) for i in range(b)]
+    return Summary(*(jnp.stack([getattr(r, f) for r in rows])
+                     for f in ("items", "counts", "errors")))
+
+
+def _window_block(k, w, pattern, seed, b=2):
+    rng = np.random.default_rng(seed)
+    if pattern == "dups":        # zipf: heavy duplication, like real traffic
+        win = np.minimum(rng.zipf(1.2, size=(b, w)), 8 * k - 1)
+    else:                        # all-distinct: every id absorbs separately
+        win = np.stack([rng.choice(8 * k, size=w, replace=False)
+                        for _ in range(b)])
+    return jnp.asarray(win.astype(np.int32))
+
+
+@pytest.mark.parametrize("k", [64, 2048])
+@pytest.mark.parametrize("fill", [0.0, 0.4, 1.0])
+@pytest.mark.parametrize("pattern", ["dups", "distinct"])
+def test_fused_ingest_window_matrix_bitwise(k, fill, pattern):
+    if "fused" not in IMPLS:
+        pytest.skip(f"impl sweep restricted to {IMPLS}")
+    s = _batched_summary(k, fill, seed=17 * k)
+    window = _window_block(k, max(64, k // 4), pattern, seed=k + 3)
+    fused = ops.ingest_window(s.items, s.counts, s.errors, window,
+                              impl="fused")
+    for ref_impl in ("sorted", "jnp"):
+        ref = ops.ingest_window(s.items, s.counts, s.errors, window,
+                                impl=ref_impl)
+        _assert_summaries_equal(
+            Summary(*fused), Summary(*ref),
+            msg=f"fused-vs-{ref_impl} k={k} fill={fill} pattern={pattern}")
+
+
+@pytest.mark.parametrize("k", [64, 2048])
+@pytest.mark.parametrize("fill", [0.0, 0.4, 1.0])
+def test_fused_combine_summaries_matrix_bitwise(k, fill):
+    if "fused" not in IMPLS:
+        pytest.skip(f"impl sweep restricted to {IMPLS}")
+    s1 = _batched_summary(k, fill, seed=5 * k)
+    s2 = _batched_summary(k, 1.0 - fill / 2, seed=5 * k + 2)
+    fused = ops.combine_summaries(*s1, *s2, impl="fused")
+    for ref_impl in ("sorted", "jnp"):
+        ref = ops.combine_summaries(*s1, *s2, impl=ref_impl)
+        _assert_summaries_equal(
+            Summary(*fused), Summary(*ref),
+            msg=f"fused-vs-{ref_impl} k={k} fill={fill}")
 
 
 # ---------------------------------------------------------------------------

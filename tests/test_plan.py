@@ -324,7 +324,15 @@ def test_tune_cli_writes_plan_and_passes_check(tmp_path, monkeypatch):
     record = json.loads(out.read_text())
     assert record["check"]["failures"] == []
     assert all(record["check"]["bitwise_equivalent"].values())
-    assert {r["op"] for r in record["probes"]} == {"combine", "query"}
+    assert {r["op"] for r in record["probes"]} \
+        == {"combine", "query", "flush"}
+    # the flush surface always probes the fused megakernel alongside the
+    # requested --kernels; the other ops never do
+    by_op = {}
+    for r in record["probes"]:
+        by_op.setdefault(r["op"], set()).add(r["impl"])
+    assert "fused" in by_op["flush"]
+    assert "fused" not in by_op["combine"] | by_op["query"]
     assert record["plan"]["source"] == "measured"
     # the cached plan is picked up by a fresh resolution pass
     cache_file = plan_path(device_fingerprint(), tmp_path / "cache")
