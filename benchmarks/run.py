@@ -13,7 +13,11 @@ BENCH_plan.json and times the PlanService ``plan_resolution`` hot path;
 the ``roofline`` section runs the ENGINE roofline (measured kernel
 dispatch vs a bytes/ops lower bound at measured host peaks, per op ×
 impl × k × chunk) into the ``roofline`` key of BENCH_sketch.json, and
-summarizes the model-level dry-run artifacts (results/dryrun) if present.
+summarizes the model-level dry-run artifacts (results/dryrun) if present;
+the ``serve`` section runs the concurrent serving-tier load harness
+(repro.launch.bench_serve --quick, subprocess) into BENCH_serve.json —
+sustained updates/sec with/without concurrent readers + per-op read
+latency percentiles.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig1,sketch,scaling,...]
                                           [--quick] [--check]
@@ -112,17 +116,55 @@ def run_scaling(emit, out_path: str) -> dict | None:
     return record
 
 
+def run_serve(emit, out_path: str) -> dict | None:
+    """The serving-tier load harness via ``repro.launch.bench_serve``.
+
+    Runs in a subprocess (its reader threads + ingest thread deserve a
+    fresh jax process, and the quick profile pins sizes); writes
+    BENCH_serve.json and surfaces the headline numbers — sustained
+    updates/sec with and without readers, their ratio, and per-op p50/p99
+    read latency — in the CSV.
+    """
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.bench_serve", "--quick",
+         "--out", out_path],
+        capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        print(f"serve,failed,{r.stderr[-500:]!r}", file=sys.stderr)
+        return None
+    record = json.loads(Path(out_path).read_text())
+    for impl, res in record["impls"].items():
+        emit(f"serve_{impl}_updates_per_s",
+             f"{res['loaded']['updates_per_s']:.4e}",
+             f"ratio={res['ingest_ratio']:.3f};"
+             f"baseline={res['baseline']['updates_per_s']:.4e}")
+        for op, q in res["loaded"]["queries"].items():
+            emit(f"serve_{impl}_{op}_p99", f"{q['p99_s']:.4e}",
+                 f"p50={q['p50_s']:.4e};n={q['count']}")
+    s = record["summary"]
+    emit("serve_min_ingest_ratio", f"{s['min_ingest_ratio']:.3f}")
+    emit("serve_all_equivalent", str(s["all_equivalent"]).lower())
+    emit("serve_json", out_path, "written")
+    return record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,tab34,fig56,sketch,"
-                         "scaling,plan,roofline")
+                         "scaling,plan,roofline,serve")
     ap.add_argument("--sketch-json", default="BENCH_sketch.json",
                     help="where the sketch-bench record is written")
     ap.add_argument("--scaling-json", default="BENCH_scaling.json",
                     help="where the scaling-sweep record is written")
     ap.add_argument("--plan-json", default="BENCH_plan.json",
                     help="where the tune-sweep record is written")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="where the serving-tier record is written")
     ap.add_argument("--quick", action="store_true",
                     help="CI-smoke scale; without --only, restricts the "
                          "run to the sketch+roofline sections")
@@ -162,6 +204,9 @@ def main() -> None:
         plan_cache = tempfile.mkdtemp(prefix="bench-plan-cache-")
         run_plan(emit, args.plan_json, plan_cache)
         bench_plan_resolution(emit, cache_dir=plan_cache)
+
+    if only is None or "serve" in only:
+        run_serve(emit, args.serve_json)
 
     check_failures: list[str] = []
     roofline_record = None

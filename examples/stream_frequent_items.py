@@ -1,63 +1,64 @@
-"""Streaming frequent items through the StreamRuntime.
+"""Streaming frequent items through the concurrent serving tier.
 
-The runtime owns the whole distributed ingestion path (DESIGN.md §8): the
-stream is block-decomposed over shards × lanes workers (the paper's
-MPI-rank × OpenMP-thread structure — on one device the shard level
-collapses and the lanes are vmapped), host blocks are staged onto devices
-double-buffered (`feed`: the transfer of block i+1 overlaps the ingestion
-of block i), appends are cheap and the vectorized merge runs once per
-``buffer_depth`` chunks. Reports go through the read-side QueryService:
-the runtime publishes immutable versioned snapshots with per-worker
-provenance, and its QueryFrontend answers top-n / point / k-majority
-queries on the same dispatched kernels.
+The ServingTier owns the whole write/read split (DESIGN.md §11): host
+stream blocks go through a bounded admission queue into an IngestLoop
+thread that drives the StreamRuntime's distributed ingestion path
+(DESIGN.md §8 — block decomposition over shards × lanes workers, sharded
+device_put staging, merges deferred over ``buffer_depth`` chunks) and
+publishes immutable versioned snapshots into a lock-free SnapshotRing
+every ``publish_every`` blocks. Reads never touch the write path: the
+ring's ServeFrontend answers top-n / point / k-majority queries from the
+newest complete version on the same dispatched kernels, and pays the
+device wait itself.
 
   PYTHONPATH=src python examples/stream_frequent_items.py
 """
-import numpy as np
-
 from repro.data.synthetic import zipf_stream
 from repro.engine import EngineConfig
-from repro.runtime import RuntimeConfig, StreamRuntime
+from repro.runtime import RuntimeConfig
+from repro.serve import ServeConfig, ServingTier
 
 K = 512
 LANES = 8            # vmapped sketch lanes per shard (the OpenMP level)
 CHUNK = 4096
 DEPTH = 4            # chunks buffered per deferred merge
 
-runtime = StreamRuntime(RuntimeConfig(
-    engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK, buffer_depth=DEPTH,
-                        reduction="hierarchical"),
-    shards=None))    # None → shard over every host device
-state = runtime.init()
-frontend = runtime.frontend()
+config = ServeConfig(
+    runtime=RuntimeConfig(
+        engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                            buffer_depth=DEPTH, reduction="hierarchical"),
+        shards=None),    # None → shard over every host device
+    publish_every=5,     # ring version every 5 admitted blocks
+    queue_depth=8)       # bounded admission: submit() backpressures
 
-print(f"streaming 40 blocks × {runtime.workers} workers "
-      f"({runtime.shards} shard(s) × {LANES} lanes) × {CHUNK} items "
-      f"(merges deferred {DEPTH}×)")
-for step in range(4):
-    # 10 host blocks per leg, staged ahead of compute (double-buffered)
-    blocks = (zipf_stream(runtime.workers * CHUNK, 1.1, seed=10 * step + i,
-                          max_id=10**6)
-              for i in range(10))
-    state = runtime.feed(state, blocks)
-    # publish a frozen versioned view (pending chunks included; the
-    # ingest buffer keeps filling) and query it via the frontend
-    snap = runtime.snapshot(state)
-    print(f"  after {int(snap.n):9,d} items (snapshot v{snap.version}), "
-          f"top-3:",
-          [(r["item"], r["count"]) for r in frontend.top_table(snap, 3)])
+with ServingTier(config) as tier:
+    runtime = tier.runtime
+    print(f"streaming 40 blocks × {runtime.workers} workers "
+          f"({runtime.shards} shard(s) × {LANES} lanes) × {CHUNK} items "
+          f"(merges deferred {DEPTH}×, publish every "
+          f"{tier.publish_every} blocks)")
+    for step in range(4):
+        for i in range(10):
+            tier.submit(zipf_stream(runtime.workers * CHUNK, 1.1,
+                                    seed=10 * step + i, max_id=10**6))
+        # drain() ingests everything admitted so far and publishes
+        # exactly that position; reads below come from the ring
+        snap = tier.drain()
+        top = tier.frontend.top_table(3)
+        print(f"  after {int(snap.n):9,d} items (snapshot v{top.version}), "
+              f"top-3:", [(r["item"], r["count"]) for r in top.rows])
 
-# frequency queries + the paper's guarantee-split k-majority report,
-# all against one immutable snapshot
-snap = runtime.snapshot(state)
-queries = [1, 2, 3, 50, 999_999]
-f_hat, lower, monitored = frontend.estimate(snap, queries)
-print("\nqueries (item -> f̂ [lower bound] monitored?):")
-for q, f, lo, mon in zip(queries, np.asarray(f_hat),
-                         np.asarray(lower), np.asarray(monitored)):
-    print(f"  {int(q):8d} -> {int(f):9d} [{int(lo):9d}] {bool(mon)}")
+    # frequency queries + the paper's guarantee-split k-majority report,
+    # all answered from the ring's newest complete version
+    queries = [1, 2, 3, 50, 999_999]
+    est = tier.frontend.estimate(queries)
+    print(f"\nqueries @ v{est.version} (item -> f̂ [lower bound] "
+          "monitored?):")
+    for q, f, lo, mon in zip(queries, est.f_hat, est.lower, est.monitored):
+        print(f"  {int(q):8d} -> {int(f):9d} [{int(lo):9d}] {bool(mon)}")
 
-report = frontend.k_majority_report(snap, k_majority=100)
-print(f"\n100-majority (threshold {report.threshold:,d} of "
-      f"n={report.n:,d}): {report.guaranteed_items.size} guaranteed, "
-      f"{report.unconfirmed_items.size} unconfirmed candidates")
+    report = tier.frontend.k_majority_report(100)
+    print(f"\n100-majority (threshold {report.threshold:,d} of "
+          f"n={report.n:,d}): {report.guaranteed_items.size} guaranteed, "
+          f"{report.unconfirmed_items.size} unconfirmed candidates")
+    print("\ntier:", tier.describe())

@@ -1,0 +1,409 @@
+"""Mixed read/write load harness for the concurrent serving tier.
+
+Measures the claim in DESIGN.md §11 — *reads never block ingestion* — by
+running, per kernel impl, four phases against ONE StreamRuntime (shared
+jitted programs, so phases compare compute, not compiles):
+
+  1. **reference**: the same host blocks ingested synchronously through
+     ``StreamRuntime.ingest`` — the bitwise ground truth for the served
+     sketch and the guarantee that the tier's threaded path changes
+     *when* work happens, never *what* is computed.
+  2. **warmup**: a throwaway ServingTier ingests a few blocks and runs
+     each query op once, compiling the donated ingest program, the
+     publish reduction, and the query kernels outside the timed phases.
+  3. **baseline**: a fresh tier ingests the full stream with zero
+     readers — the reader-free sustained updates/sec.
+  4. **loaded**: a fresh tier ingests the identical stream while reader
+     threads fire point / top-n / k-majority queries at a throttled
+     aggregate ``--qps`` against the ring, recording per-op wall-clock
+     latency (which *includes* snapshot materialization — the reader
+     pays the freshness cost, by design).
+
+``--check`` gates (the CI serve-smoke leg):
+
+  * ingest-with-readers within ``--min-ingest-ratio`` (default 0.9) of
+    the same run's reader-free baseline — the ≤10% interference SLO;
+  * per-op p50/p99 latency under ``--p50-slo``/``--p99-slo``;
+  * baseline AND loaded drained snapshots bitwise-identical to the
+    synchronous reference at the same stream position;
+  * admission accounting closes: submitted + shed == offered, and every
+    admitted block was ingested by drain time.
+
+Results: ``name,value,derived`` CSV on stdout + ``BENCH_serve.json``.
+
+  python -m repro.launch.bench_serve                    # full run
+  python -m repro.launch.bench_serve --quick --check    # CI smoke
+  python -m repro.launch.bench_serve --kernels jnp,sorted --qps 200
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import threading
+import time
+from pathlib import Path
+
+QUERY_OPS = ("point", "top", "kmaj")
+
+
+def _percentile(samples, q) -> float:
+    if not samples:
+        return float("nan")
+    xs = sorted(samples)
+    idx = min(len(xs) - 1, max(0, int(math.ceil(q / 100 * len(xs))) - 1))
+    return xs[idx]
+
+
+def _snapshot_digest(snap):
+    """Host copies of the summary leaves + n (phase-comparable identity)."""
+    import numpy as np
+    return ([np.asarray(leaf) for leaf in snap.summary], int(snap.n))
+
+
+def _digests_equal(a, b) -> bool:
+    import numpy as np
+    (leaves_a, n_a), (leaves_b, n_b) = a, b
+    return n_a == n_b and all(
+        bool((x == y).all()) for x, y in zip(leaves_a, leaves_b))
+
+
+def _reader(frontend, stop, out, *, queries, kmaj, period, offset):
+    """One reader thread: round-robin op mix, throttled to ``1/period`` qps.
+
+    Latency is wall-clock around the frontend call — it includes the ring
+    lookup, the batched query dispatch, AND the host materialization of
+    the answer (the device wait a real consumer pays).
+    """
+    i = offset
+    nxt = time.perf_counter()
+    while not stop.is_set():
+        op = QUERY_OPS[i % len(QUERY_OPS)]
+        i += 1
+        t0 = time.perf_counter()
+        if op == "point":
+            frontend.estimate(queries)
+        elif op == "top":
+            frontend.top_table(10)
+        else:
+            frontend.k_majority_report(kmaj)
+        out[op].append(time.perf_counter() - t0)
+        if period:
+            nxt += period
+            delay = nxt - time.perf_counter()
+            if delay > 0:
+                stop.wait(delay)
+            else:           # fell behind: resynchronize, don't burst
+                nxt = time.perf_counter()
+
+
+def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
+              admission, readers=0, qps=0.0, queries=None, kmaj=64,
+              warm_queries=False):
+    """One tier phase: submit every block, drain, return measurements."""
+    from repro.runtime import RuntimeConfig  # noqa: F401  (doc anchor)
+    from repro.serve import ServeConfig, ServingTier
+
+    cfg = ServeConfig(runtime=runtime.config, publish_every=publish_every,
+                      ring_depth=ring_depth, queue_depth=queue_depth,
+                      admission=admission)
+    tier = ServingTier(cfg, runtime=runtime).start()
+    try:
+        if warm_queries:
+            tier.frontend.estimate(queries)
+            tier.frontend.top_table(10)
+            tier.frontend.k_majority_report(kmaj)
+
+        stop = threading.Event()
+        outs, threads = [], []
+        period = readers / qps if (readers and qps) else 0.0
+        for r in range(readers):
+            out = {op: [] for op in QUERY_OPS}
+            t = threading.Thread(
+                target=_reader, args=(tier.frontend, stop, out),
+                kwargs=dict(queries=queries, kmaj=kmaj, period=period,
+                            offset=r), daemon=True)
+            outs.append(out)
+            threads.append(t)
+            t.start()
+
+        t0 = time.perf_counter()
+        for b in blocks:
+            tier.submit(b)
+        snap = tier.drain()
+        elapsed = time.perf_counter() - t0
+
+        stop.set()
+        for t in threads:
+            t.join()
+        stats = tier.stats.describe()
+    finally:
+        tier.stop(drain=False)
+
+    latencies = {op: [s for out in outs for s in out[op]]
+                 for op in QUERY_OPS}
+    return {"elapsed_s": elapsed, "snapshot": _snapshot_digest(snap),
+            "stats": stats, "latencies": latencies}
+
+
+def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
+              publish_every, ring_depth, queue_depth, admission, readers,
+              qps, kmaj, seed=0, emit=lambda *a: None) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.data.synthetic import zipf_stream
+    from repro.engine import EngineConfig
+    from repro.runtime import RuntimeConfig, StreamRuntime
+    from repro.runtime.feed import host_blocks
+
+    results = {}
+    for impl in impls:
+        rt = StreamRuntime(RuntimeConfig(
+            engine=EngineConfig(k=k, tenants=lanes, chunk=chunk,
+                                buffer_depth=depth, kernel=impl),
+            shards=1))
+        block_items = rt.workers * chunk * layers
+        host_stream = [zipf_stream(block_items, 1.1, seed=seed + i,
+                                   max_id=10**6) for i in range(blocks)]
+        items_total = blocks * block_items
+        queries = np.asarray(
+            np.random.default_rng(seed).integers(0, 10**6, size=8)
+            .astype(np.int32))
+
+        # 1. reference: the synchronous ground truth over the SAME
+        # per-block canonical decomposition the IngestLoop applies
+        state = rt.init()
+        for b in host_stream:
+            state = rt.ingest(state, host_blocks(b, rt.workers, chunk))
+        reference = _snapshot_digest(rt.snapshot(state))
+
+        # 2. warmup tier: compile donated ingest + publish + query paths
+        _run_tier(rt, host_stream[:2], publish_every=publish_every,
+                  ring_depth=ring_depth, queue_depth=queue_depth,
+                  admission=admission, queries=queries, kmaj=kmaj,
+                  warm_queries=True)
+
+        # 3. reader-free baseline
+        base = _run_tier(rt, host_stream, publish_every=publish_every,
+                         ring_depth=ring_depth, queue_depth=queue_depth,
+                         admission=admission, queries=queries, kmaj=kmaj)
+        base_ups = items_total / base["elapsed_s"]
+        base_ok = _digests_equal(base["snapshot"], reference)
+        emit(f"serve_{impl}_baseline_updates_per_s", f"{base_ups:.4e}",
+             f"elapsed={base['elapsed_s']:.3f}s")
+
+        # 4. identical stream under reader load
+        load = _run_tier(rt, host_stream, publish_every=publish_every,
+                         ring_depth=ring_depth, queue_depth=queue_depth,
+                         admission=admission, readers=readers, qps=qps,
+                         queries=queries, kmaj=kmaj)
+        load_ups = items_total / load["elapsed_s"]
+        load_ok = _digests_equal(load["snapshot"], reference)
+        ratio = load_ups / base_ups
+        reads = sum(len(v) for v in load["latencies"].values())
+        achieved_qps = reads / load["elapsed_s"]
+        emit(f"serve_{impl}_loaded_updates_per_s", f"{load_ups:.4e}",
+             f"readers={readers};qps={achieved_qps:.1f}")
+        emit(f"serve_{impl}_ingest_ratio", f"{ratio:.3f}",
+             "loaded/baseline updates_per_s")
+        emit(f"serve_{impl}_equivalent",
+             str(base_ok and load_ok).lower(),
+             f"baseline={base_ok};loaded={load_ok}")
+
+        query_stats = {}
+        for op, samples in load["latencies"].items():
+            query_stats[op] = {
+                "count": len(samples),
+                "p50_s": _percentile(samples, 50),
+                "p99_s": _percentile(samples, 99),
+                "mean_s": (sum(samples) / len(samples)) if samples
+                else float("nan"),
+            }
+            emit(f"serve_{impl}_{op}_p50", f"{query_stats[op]['p50_s']:.4e}",
+                 f"n={len(samples)}")
+            emit(f"serve_{impl}_{op}_p99", f"{query_stats[op]['p99_s']:.4e}",
+                 f"n={len(samples)}")
+
+        results[impl] = {
+            "block_items": block_items,
+            "items_total": items_total,
+            "baseline": {"elapsed_s": base["elapsed_s"],
+                         "updates_per_s": base_ups,
+                         "equivalent": base_ok,
+                         "stats": base["stats"]},
+            "loaded": {"elapsed_s": load["elapsed_s"],
+                       "updates_per_s": load_ups,
+                       "equivalent": load_ok,
+                       "reads_total": reads,
+                       "achieved_qps": achieved_qps,
+                       "queries": query_stats,
+                       "stats": load["stats"]},
+            "ingest_ratio": ratio,
+        }
+
+    ratios = [r["ingest_ratio"] for r in results.values()]
+    p99s = [q["p99_s"] for r in results.values()
+            for q in r["loaded"]["queries"].values()
+            if math.isfinite(q["p99_s"])]
+    return {
+        "config": {
+            "impls": list(impls), "k": k, "lanes": lanes, "chunk": chunk,
+            "buffer_depth": depth, "blocks": blocks, "layers": layers,
+            "publish_every": publish_every, "ring_depth": ring_depth,
+            "queue_depth": queue_depth, "admission": admission,
+            "readers": readers, "qps": qps, "k_majority": kmaj,
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+        },
+        "impls": results,
+        "summary": {
+            "min_ingest_ratio": min(ratios) if ratios else float("nan"),
+            "worst_p99_s": max(p99s) if p99s else float("nan"),
+            "all_equivalent": all(
+                r["baseline"]["equivalent"] and r["loaded"]["equivalent"]
+                for r in results.values()),
+        },
+    }
+
+
+def check_record(record: dict, *, min_ratio: float, p50_slo: float,
+                 p99_slo: float) -> list[str]:
+    """The serve SLO gate — every violation is one line."""
+    failures = []
+    blocks = record["config"]["blocks"]
+    for impl, r in record["impls"].items():
+        if not r["baseline"]["equivalent"]:
+            failures.append(f"{impl}: baseline tier snapshot != "
+                            "synchronous reference")
+        if not r["loaded"]["equivalent"]:
+            failures.append(f"{impl}: loaded tier snapshot != "
+                            "synchronous reference")
+        if not (r["ingest_ratio"] >= min_ratio):
+            failures.append(
+                f"{impl}: ingest under readers at "
+                f"{r['ingest_ratio']:.3f}× of reader-free baseline "
+                f"(SLO >= {min_ratio})")
+        for op, q in r["loaded"]["queries"].items():
+            if q["count"] == 0:
+                failures.append(f"{impl}/{op}: no reads sampled — the "
+                                "loaded phase measured nothing")
+                continue
+            if not (q["p50_s"] <= p50_slo):
+                failures.append(f"{impl}/{op}: p50 {q['p50_s']:.4f}s "
+                                f"exceeds SLO {p50_slo}s")
+            if not (q["p99_s"] <= p99_slo):
+                failures.append(f"{impl}/{op}: p99 {q['p99_s']:.4f}s "
+                                f"exceeds SLO {p99_slo}s")
+        for phase in ("baseline", "loaded"):
+            st = r[phase]["stats"]
+            if st["blocks_submitted"] + st["blocks_shed"] != blocks:
+                failures.append(
+                    f"{impl}/{phase}: admission accounting open — "
+                    f"{st['blocks_submitted']} submitted + "
+                    f"{st['blocks_shed']} shed != {blocks} offered")
+            if st["blocks_ingested"] != st["blocks_submitted"]:
+                failures.append(
+                    f"{impl}/{phase}: {st['blocks_submitted']} admitted "
+                    f"but only {st['blocks_ingested']} ingested by drain")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", default="jnp,sorted",
+                    help="comma list of impls (fused runs in interpret "
+                         "mode off-TPU: slow, bench deliberately)")
+    ap.add_argument("--k", type=int, default=2048)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--depth", type=int, default=4,
+                    help="engine buffer depth T")
+    ap.add_argument("--blocks", type=int, default=256,
+                    help="host stream blocks submitted per phase")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="chunk layers per block (block = W×chunk×layers)")
+    ap.add_argument("--publish-every", type=int, default=None,
+                    help="blocks per ring publish (default: active plan)")
+    ap.add_argument("--ring-depth", type=int, default=None,
+                    help="snapshot ring depth (default: active plan)")
+    ap.add_argument("--queue-depth", type=int, default=8)
+    ap.add_argument("--admission", default="block",
+                    choices=("block", "shed"))
+    ap.add_argument("--readers", type=int, default=4,
+                    help="concurrent reader threads in the loaded phase")
+    ap.add_argument("--qps", type=float, default=50.0,
+                    help="aggregate reader queries/sec (0 = unthrottled; "
+                         "size against cores — on a 1-core host reads "
+                         "steal ~qps×read_cost of the writer's CPU)")
+    ap.add_argument("--k-majority", type=int, default=64)
+    ap.add_argument("--min-ingest-ratio", type=float, default=0.9,
+                    help="--check: loaded/baseline updates_per_s floor "
+                         "(the <=10%% interference SLO)")
+    ap.add_argument("--p50-slo", type=float, default=0.5,
+                    help="--check: per-op p50 latency ceiling (s)")
+    ap.add_argument("--p99-slo", type=float, default=5.0,
+                    help="--check: per-op p99 latency ceiling (s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-smoke sizes (k=256, chunk=512, fewer blocks)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless SLO + bitwise gates hold")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        # sized so the timed phases span ~1-2s on a small CI runner:
+        # long enough for stable percentiles and an ingest-ratio gate
+        # that measures steady state, short enough for a smoke leg
+        args.k, args.chunk, args.depth = 256, 512, 2
+        args.blocks, args.layers = 240, 8
+        args.readers = min(args.readers, 2)
+        args.qps = min(args.qps, 25.0)
+
+    # the plan-resolved defaults are materialized HERE (not inside the
+    # tier) so the record shows the cadence the run actually used
+    from repro.plan import active_plan
+    plan = active_plan()
+    publish_every = args.publish_every or plan.publish_every
+    ring_depth = args.ring_depth or plan.ring_depth
+
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    emit("serve_publish_every", publish_every, f"plan={plan.source}")
+    emit("serve_ring_depth", ring_depth, f"plan={plan.source}")
+
+    record = run_bench(
+        impls=[i.strip() for i in args.kernels.split(",")],
+        k=args.k, lanes=args.lanes, chunk=args.chunk, depth=args.depth,
+        blocks=args.blocks, layers=args.layers,
+        publish_every=publish_every, ring_depth=ring_depth,
+        queue_depth=args.queue_depth, admission=args.admission,
+        readers=args.readers, qps=args.qps, kmaj=args.k_majority,
+        seed=args.seed, emit=emit)
+
+    Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+    emit("serve_json", args.out, "written")
+    s = record["summary"]
+    emit("min_ingest_ratio", f"{s['min_ingest_ratio']:.3f}")
+    emit("worst_p99_s", f"{s['worst_p99_s']:.4e}")
+    emit("all_equivalent", str(s["all_equivalent"]).lower())
+
+    if args.check:
+        failures = check_record(record, min_ratio=args.min_ingest_ratio,
+                                p50_slo=args.p50_slo, p99_slo=args.p99_slo)
+        if failures:
+            for f in failures:
+                print(f"CHECK FAILED: {f}", file=sys.stderr)
+            return 1
+        print("check,ok,SLO + bitwise + accounting gates hold", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,11 +4,12 @@ The Space Saving sketch rides along as serving telemetry through the
 StreamRuntime (the one consumer-facing ingestion surface): the decode step
 feeds the emitted-token stream into the engine's buffered update path
 (merges amortized over ``buffer_depth`` chunks). ``--report-every``
-publishes an immutable QuerySnapshot (``runtime.snapshot`` — the ingest
-buffer is NOT flushed; decode keeps appending to it) and answers hot-token
-queries through the runtime's QueryFrontend:
-top-n plus the guarantee-split k-majority report — k = O(1) memory
-regardless of traffic.
+publishes an immutable QuerySnapshot into a :class:`SnapshotRing`
+(``RingPublisher`` — the ingest buffer is NOT flushed; decode keeps
+appending to it) and answers hot-token queries through the ring's
+:class:`ServeFrontend`: top-n plus the guarantee-split k-majority report
+— k = O(1) memory regardless of traffic, and the published versions
+remain readable by any concurrent consumer of the ring.
 
   python -m repro.launch.serve --arch mamba2-130m --smoke \
       --batch 4 --prompt-len 64 --gen 64
@@ -25,6 +26,7 @@ import numpy as np
 from repro.configs.registry import get_arch, get_smoke_arch
 from repro.data.synthetic import TokenStream
 from repro.models import model as M
+from repro.serve import RingPublisher, ServeFrontend, SnapshotRing
 from repro.sharding.rules import ShardingPlan
 from repro.train import steps as S
 from repro.train import sketch as SK
@@ -85,30 +87,38 @@ def main(argv=None):
     runtime = SK.token_runtime(cfg.sketch, groups,
                                chunk=max(1, args.batch // groups))
     sketch = runtime.init()
-    frontend = runtime.frontend()
+    # telemetry reads go through the serving tier's ring: publish is one
+    # async dispatch + an atomic pointer swap, and the frontend pays the
+    # device wait when it materializes answers — never the decode loop
+    ring = SnapshotRing()
+    publisher = RingPublisher(runtime, ring)
+    telemetry = ServeFrontend(ring, runtime.frontend())
     tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     emitted = []
     t0 = time.time()
     for i in range(args.gen):
         pos = args.prompt_len + i
         tokens_next, cache, sketch = serve(params, cache, tokens, pos, sketch)
-        emitted.append(np.asarray(tokens_next))
+        # device-side accumulation: np.asarray here would block the loop
+        # on every step's transfer; one host sync after the loop instead
+        emitted.append(tokens_next)
         tokens = tokens_next[:, None]
         if (i + 1) % args.report_every == 0:
-            # publish a frozen view; the decode loop's ingest buffer is
-            # untouched and keeps filling between reports
-            snap = runtime.snapshot(sketch)
-            hot = frontend.top_table(snap, n=5)
-            rep = frontend.k_majority_report(snap, args.k_majority)
-            print(f"  [hot-tokens @ {i+1} v{snap.version} n={int(snap.n)}] "
-                  + ", ".join(f"{r['item']}:{r['count']}" for r in hot)
+            # publish a frozen view into the ring; the decode loop's
+            # ingest buffer is untouched and keeps filling between reports
+            snap = publisher.publish(sketch)
+            hot = telemetry.top_table(5)
+            rep = telemetry.k_majority_report(args.k_majority)
+            print(f"  [hot-tokens @ {i+1} v{snap.version} n={hot.n}] "
+                  + ", ".join(f"{r['item']}:{r['count']}" for r in hot.rows)
                   + f" | {args.k_majority}-majority: "
                   f"{rep.guaranteed_items.size} guaranteed + "
                   f"{rep.unconfirmed_items.size} candidate")
+    sample = np.asarray(jnp.stack(emitted, 1))     # the one host transfer
     dt = time.time() - t0
     print(f"[serve] generated {args.gen}×{args.batch} tokens in {dt:.2f}s "
           f"({args.gen*args.batch/dt:.1f} tok/s)")
-    print("[serve] sample:", np.stack(emitted, 1)[0][:16].tolist())
+    print("[serve] sample:", sample[0][:16].tolist())
 
 
 if __name__ == "__main__":

@@ -49,7 +49,41 @@ from pathlib import Path
 # probe it on demand via --ops update,combine,query,flush — its plan table
 # still resolves (static fallback) for external callers.
 OPS = ("combine", "query", "flush")
+# 'publish' is NOT a kernel-table op: the probe times the serving tier's
+# write-path pair (one ingest step vs one snapshot publish) and the plan
+# records a CADENCE (publish_every / ring_depth), not an impl choice — so
+# it is handled outside the kernel sweep/gate machinery below.
+DEFAULT_OPS = OPS + ("publish",)
 STRATEGIES = ("butterfly", "allgather", "hierarchical")
+
+#: snapshot publishes may cost at most this fraction of ingest
+#: throughput at the planned cadence (the serving tier's SLO input)
+PUBLISH_BUDGET = 0.1
+
+
+def _choose_publish(rows, budget: float = PUBLISH_BUDGET) -> tuple[int, int]:
+    """(publish_every, ring_depth) from the measured step/publish costs.
+
+    Cadence: publishing every ``ceil(ratio / budget)`` ingested blocks
+    caps snapshot overhead at ``budget`` of ingest throughput, where
+    ``ratio`` is publish-cost / step-cost at the largest probed k (the
+    production-sized budget — publish cost grows with k, so the widest
+    cell is the binding one). Clamped to [1, 256].
+
+    Ring depth: a reader that pinned ``latest`` must still find it after
+    the publishes that complete while its answer materializes — one
+    publish takes ``ratio`` steps of device time, during which at most
+    ``ceil(ratio / publish_every)`` newer versions can land. Two slots of
+    slack on top of that (the in-flight publish and the pinned read),
+    clamped to [2, 16].
+    """
+    if not rows:
+        return 8, 4
+    row = max(rows, key=lambda r: r["k"])
+    ratio = row["publish_per_step"]
+    publish_every = max(1, min(256, math.ceil(ratio / budget)))
+    ring_depth = max(2, min(16, 2 + math.ceil(ratio / publish_every)))
+    return publish_every, ring_depth
 
 
 def _impls_for_op(op: str, impls) -> list[str]:
@@ -247,7 +281,7 @@ def _bootstrap_devices(max_p: int, argv) -> int | None:
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     ap = argparse.ArgumentParser()
-    ap.add_argument("--ops", default=",".join(OPS))
+    ap.add_argument("--ops", default=",".join(DEFAULT_OPS))
     ap.add_argument("--kernels", default="jnp,sorted",
                     help="comma list of impls to probe (pallas runs in "
                          "interpret mode off-TPU: slow, probe deliberately)")
@@ -303,6 +337,10 @@ def main(argv=None) -> int:
         args.tolerance = 1.0 if q else 0.5
 
     ops = [o.strip() for o in args.ops.split(",")]
+    # the kernel-table machinery (sweep, cost model, tolerance + bitwise
+    # gates) only understands impl-choice ops; 'publish' is a cadence
+    # probe handled in its own section below
+    kernel_ops = [o for o in ops if o != "publish"]
     impls = [i.strip() for i in args.kernels.split(",")]
     ks = sorted({int(k) for k in args.k.split(",")})
     cs = sorted({int(c) for c in args.chunks.split(",")})
@@ -318,7 +356,8 @@ def main(argv=None) -> int:
 
     from repro.plan import CostModel, ExecutionPlan, device_fingerprint, \
         plan_path, static_impl
-    from repro.plan.probe import probe_kernels, probe_reductions, timeit
+    from repro.plan.probe import probe_kernels, probe_publish, \
+        probe_reductions, timeit
 
     print("name,value,derived")
 
@@ -332,7 +371,7 @@ def main(argv=None) -> int:
     # per-op sweeps: the flush surface always probes the fused megakernel
     # on top of --kernels (see _impls_for_op)
     rows = []
-    for op in ops:
+    for op in kernel_ops:
         rows += probe_kernels(ops=(op,), impls=_impls_for_op(op, impls),
                               ks=ks, cs=cs, dtype=args.dtype,
                               repeat=args.repeat, seed=args.seed, emit=emit)
@@ -352,12 +391,12 @@ def main(argv=None) -> int:
     min_batch = _choose_query_min_batch(mb_rows, chunk)
     op_c = {"query": min_batch}
     kernels = {op: {k: model.choose_impl(op, k, op_c.get(op, chunk))
-                    for k in ks} for op in ops}
+                    for k in ks} for op in kernel_ops}
 
     # held-out validation: probe geometric-midpoint budgets and compare
     # against the model's interpolation (the BENCH-tracked model error)
     held_out = []
-    for op in ops:
+    for op in kernel_ops:
         held_out += probe_kernels(ops=(op,),
                                   impls=_impls_for_op(op, impls),
                                   ks=_midpoints(ks), cs=[chunk],
@@ -386,16 +425,36 @@ def main(argv=None) -> int:
                 reductions[p] = best["strategy"]
                 pods[p] = best["pods"]
 
+    # -- publish probes (serving cadence) ------------------------------------
+    # single-shard write-path pair: one ingest step vs one snapshot
+    # publish, turned into the plan's publish_every/ring_depth serving
+    # knobs (_choose_publish). Probed at the kernel the combine table
+    # chose (the engine the serving tier actually runs).
+    publish_rows = []
+    publish_every, ring_depth = 8, 4
+    if "publish" in ops:
+        impl_pub = kernels.get("combine", {}).get(
+            max(ks), static_impl("combine", max(ks)))
+        publish_rows = probe_publish(
+            ks=(ks if len(ks) <= 2 else (min(ks), max(ks))),
+            lanes=args.lanes, chunk=chunk, depth=min(args.depth, 4),
+            impl=impl_pub, repeat=args.repeat, seed=args.seed, emit=emit)
+        publish_every, ring_depth = _choose_publish(publish_rows)
+
     # -- materialize ---------------------------------------------------------
     plan = ExecutionPlan(
         fingerprint=fp, source="measured", kernels=kernels,
         reductions=reductions, pods=pods, chunk=chunk,
-        buffer_depth=args.depth, query_min_batch=min_batch)
-    for op in ops:
+        buffer_depth=args.depth, query_min_batch=min_batch,
+        publish_every=publish_every, ring_depth=ring_depth)
+    for op in kernel_ops:
         emit(f"plan_{op}", " ".join(f"k{k}:{v}"
                                     for k, v in sorted(kernels[op].items())))
     emit("plan_chunk", chunk)
     emit("plan_query_min_batch", min_batch)
+    emit("plan_publish_every", publish_every,
+         f"budget={PUBLISH_BUDGET:.0%}")
+    emit("plan_ring_depth", ring_depth)
     for p, s in sorted(reductions.items()):
         emit(f"plan_reduction_p{p}", s, f"pods={pods.get(p, 1)}")
 
@@ -413,7 +472,7 @@ def main(argv=None) -> int:
     from repro.plan.probe import _probe_inputs
     entry = {"update": kops.match_weights, "combine": kops.combine_match,
              "query": kops.query, "flush": kops.ingest_window}
-    for op in ops:
+    for op in kernel_ops:
         for k in ks:
             planned = kernels[op][k]
             c_cell = op_c.get(op, chunk)     # the op's real operating point
@@ -448,7 +507,8 @@ def main(argv=None) -> int:
 
     # (b) bitwise: plan-resolved 'auto' ≡ every statically-configured impl,
     # at each op's dispatch surface and through the engine
-    bitwise = _bitwise_gate(plan, impls, emit, seed=args.seed, ops=ops)
+    bitwise = _bitwise_gate(plan, impls, emit, seed=args.seed,
+                            ops=kernel_ops)
     for key, ok in bitwise.items():
         if not ok:
             failures.append(f"bitwise: auto(plan) != static at {key}")
@@ -479,6 +539,7 @@ def main(argv=None) -> int:
         "probes": rows,
         "min_batch_probes": mb_rows,
         "reduction_probes": reduce_rows,
+        "publish_probes": publish_rows,
         "validation": validation,
         "model_max_rel_err": max_err,
         "plan": plan.to_json(),

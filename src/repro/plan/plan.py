@@ -93,6 +93,8 @@ class ExecutionPlan:
     chunk: int = 2048                        # recommended C
     buffer_depth: int = 8                    # recommended T
     query_min_batch: int = 16                # QueryFrontend bucket floor
+    publish_every: int = 8                   # serving: blocks per ring publish
+    ring_depth: int = 4                      # serving: SnapshotRing slots
     format: int = PLAN_FORMAT
 
     def __post_init__(self):
@@ -116,6 +118,10 @@ class ExecutionPlan:
             raise ValueError(
                 f"chunk/buffer_depth/query_min_batch must be positive: "
                 f"{self.chunk}/{self.buffer_depth}/{self.query_min_batch}")
+        if self.publish_every <= 0 or self.ring_depth <= 0:
+            raise ValueError(
+                f"publish_every/ring_depth must be positive: "
+                f"{self.publish_every}/{self.ring_depth}")
 
     # -- resolution ----------------------------------------------------------
 
@@ -158,6 +164,8 @@ class ExecutionPlan:
             "chunk": self.chunk,
             "buffer_depth": self.buffer_depth,
             "query_min_batch": self.query_min_batch,
+            "publish_every": self.publish_every,
+            "ring_depth": self.ring_depth,
         }
 
     @classmethod
@@ -177,6 +185,10 @@ class ExecutionPlan:
             chunk=int(d.get("chunk", 2048)),
             buffer_depth=int(d.get("buffer_depth", 8)),
             query_min_batch=int(d.get("query_min_batch", 16)),
+            # serving knobs arrived after format 1 shipped; absent keys
+            # (older cached plans) fall back to the static defaults
+            publish_every=int(d.get("publish_every", 8)),
+            ring_depth=int(d.get("ring_depth", 4)),
         )
 
     def save(self, path: os.PathLike | str) -> Path:

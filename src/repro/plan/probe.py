@@ -14,6 +14,8 @@ Rows are plain dicts (JSON-ready for BENCH_plan.json):
 
   kernel probes     {op, impl, k, c, dtype, time_s}
   reduction probes  {strategy, p, pods, k, time_s}
+  publish probes    {op: "publish", k, lanes, chunk, step_s, publish_s,
+                     publish_per_step}
 """
 from __future__ import annotations
 
@@ -170,4 +172,51 @@ def probe_reductions(*, ps=(1, 2, 4), strategies=("butterfly", "allgather",
             rows.append({"strategy": strategy, "p": int(p), "pods": pods,
                          "k": int(k), "time_s": t})
             emit(f"probe_reduce_{strategy}_p{p}", f"{t:.4e}")
+    return rows
+
+
+def probe_publish(*, ks=(256, 2048), lanes: int = 4, chunk: int = 2048,
+                  depth: int = 4, impl: str = "auto", repeat: int = 3,
+                  seed: int = 0, emit=lambda *a: None) -> list[dict]:
+    """The serving tier's write-path costs: one ingest step vs one publish.
+
+    Per probed counter budget, times the two dispatches the IngestLoop
+    alternates between on a warmed single-shard runtime — ``ingest`` of
+    one canonical (W, chunk) block (the per-block step) and ``snapshot``
+    (flush view + reduction + provenance: the whole price of publishing
+    one ring version). Their ratio ``publish_per_step`` is what the tune
+    CLI turns into a cadence: publish every ``ceil(ratio / budget)``
+    blocks and snapshot overhead stays under ``budget`` of ingest
+    throughput (DESIGN.md §11.3).
+    """
+    from repro.data.synthetic import zipf_stream
+    from repro.engine import EngineConfig
+    from repro.runtime import RuntimeConfig, StreamRuntime
+
+    rows = []
+    for k in ks:
+        rt = StreamRuntime(RuntimeConfig(
+            engine=EngineConfig(k=k, tenants=lanes, chunk=chunk,
+                                buffer_depth=depth, kernel=impl),
+            shards=1))
+        rng_seed = seed + 13 * k
+        # steady state: fill the summaries before timing, so the probe
+        # sees production-shaped merges, not empty-summary fast paths
+        warm = zipf_stream(4 * rt.workers * chunk, 1.1, seed=rng_seed,
+                           max_id=10**6)
+        state = rt.ingest(rt.init(), warm)
+        block = rt.decompose(zipf_stream(rt.workers * chunk, 1.1,
+                                         seed=rng_seed + 1, max_id=10**6))
+        step_s = timeit(rt.ingest, state, block, repeat=repeat)
+        # runtime.snapshot mints a fresh host-side version per call; only
+        # the array work (merged + n reductions) is device time, which is
+        # what block_until_ready inside timeit waits on
+        publish_s = timeit(lambda: rt.snapshot(state).summary,
+                           repeat=repeat)
+        ratio = publish_s / max(step_s, 1e-12)
+        rows.append({"op": "publish", "k": int(k), "lanes": int(lanes),
+                     "chunk": int(chunk), "step_s": step_s,
+                     "publish_s": publish_s, "publish_per_step": ratio})
+        emit(f"probe_publish_k{k}", f"{publish_s:.4e}",
+             f"step={step_s:.3e};ratio={ratio:.2f}")
     return rows

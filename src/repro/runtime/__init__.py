@@ -1,10 +1,10 @@
 """StreamRuntime — sharded two-level distributed ingestion (DESIGN.md §8)."""
 from repro.runtime.api import frequent_items, parallel_spacesaving
 from repro.runtime.config import RuntimeConfig
-from repro.runtime.feed import DeviceFeed, host_blocks
+from repro.runtime.feed import DeviceFeed, host_block_iter, host_blocks
 from repro.runtime.runtime import StreamRuntime
 
 __all__ = [
     "DeviceFeed", "RuntimeConfig", "StreamRuntime", "frequent_items",
-    "host_blocks", "parallel_spacesaving",
+    "host_block_iter", "host_blocks", "parallel_spacesaving",
 ]

@@ -44,6 +44,45 @@ def host_blocks(stream: np.ndarray, workers: int,
     return stream.reshape(workers, per)
 
 
+def host_block_iter(chunks: Iterable, workers: int, multiple: int = 1, *,
+                    block_items: int | None = None
+                    ) -> Iterator[np.ndarray]:
+    """Streaming :func:`host_blocks`: (workers, per) blocks from chunk pieces.
+
+    Buffers incoming host chunks only up to one block — ``block_items``
+    ids, rounded up to a full ``workers × multiple`` layer — then emits
+    that segment through ``host_blocks`` and drops it, so an unbounded
+    stream is decomposed with O(block) host memory instead of the
+    O(stream) concatenation a caller would otherwise do. The trailing
+    remainder is EMPTY-padded exactly like ``host_blocks`` (never
+    dropped); every emitted block has identical shape, so one jitted
+    ingest program serves the whole stream. Feeding the emitted blocks to
+    ``StreamRuntime.ingest`` one at a time reproduces the single-shot
+    ``host_blocks`` decomposition of the concatenated stream whenever
+    the total length is a block multiple — the padding of a final short
+    block is the only divergence, and it is the same padding
+    ``host_blocks`` itself would apply to that remainder.
+    """
+    layer = workers * multiple
+    if block_items is None:
+        block_items = layer
+    block_items = max(1, -(-block_items // layer)) * layer
+    buf: list[np.ndarray] = []
+    have = 0
+    for chunk in chunks:
+        arr = np.asarray(chunk).reshape(-1)
+        while arr.size:
+            take = min(arr.size, block_items - have)
+            buf.append(arr[:take])
+            have += take
+            arr = arr[take:]
+            if have == block_items:
+                yield host_blocks(np.concatenate(buf), workers, multiple)
+                buf, have = [], 0
+    if have:
+        yield host_blocks(np.concatenate(buf), workers, multiple)
+
+
 class DeviceFeed:
     """Iterate host blocks as device arrays, ``depth`` transfers in flight."""
 

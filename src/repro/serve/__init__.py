@@ -1,0 +1,23 @@
+"""Serving tier — reads that never block ingestion at production QPS.
+
+The long-running counterpart of the batch harnesses (DESIGN.md §11):
+continuous StreamRuntime ingestion behind a bounded admission queue
+(:class:`IngestLoop` — backpressure or counted shedding), immutable
+versioned snapshots published lock-free into a :class:`SnapshotRing`,
+and an async :class:`ServeFrontend` answering point / top-n / k-majority
+from the newest complete version through the batching QueryFrontend.
+Publish cadence and ring depth are PlanService-resolved knobs (the
+``"publish"`` probe op); ``python -m repro.launch.bench_serve`` measures
+the tier under mixed read/write load into ``BENCH_serve.json``.
+"""
+from repro.serve.config import ADMISSION_POLICIES, ServeConfig
+from repro.serve.frontend import PointEstimates, ServeFrontend, TopTable
+from repro.serve.ingest import IngestLoop, IngestStats
+from repro.serve.ring import RingPublisher, SnapshotRing, StaleSnapshotError
+from repro.serve.tier import ServingTier
+
+__all__ = [
+    "ADMISSION_POLICIES", "IngestLoop", "IngestStats", "PointEstimates",
+    "RingPublisher", "ServeConfig", "ServeFrontend", "ServingTier",
+    "SnapshotRing", "StaleSnapshotError", "TopTable",
+]

@@ -1,0 +1,72 @@
+"""ServeConfig — policy knobs of the concurrent serving tier.
+
+Wraps a :class:`~repro.runtime.RuntimeConfig` (topology + engine policy —
+the write side) with the serving-tier decisions the runtime deliberately
+does not own: how often the ingest loop publishes a snapshot to the ring,
+how many versions the ring keeps, how deep the admission queue is, and
+what happens when it fills.
+
+``publish_every`` and ``ring_depth`` default to ``None`` → the active
+:class:`~repro.plan.ExecutionPlan`'s measured values (the ``"publish"``
+probe op of ``python -m repro.launch.tune`` sizes the cadence so snapshot
+reductions cost a bounded fraction of ingest throughput — DESIGN.md
+§11.3), with the documented static fallback when no plan is cached. An
+explicit integer pins the knob, same precedence rule as every other
+"auto" in the stack.
+
+Admission policy on a full queue:
+
+  ``"block"``  the submitting producer waits (backpressure propagates
+               upstream — the default, lossless);
+  ``"shed"``   the block is dropped and counted
+               (``IngestStats.blocks_shed``) — for producers that must
+               never stall and can tolerate sampled ingestion.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.runtime.config import RuntimeConfig
+
+ADMISSION_POLICIES = ("block", "shed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static configuration of one :class:`~repro.serve.ServingTier`."""
+
+    runtime: RuntimeConfig = RuntimeConfig()
+    publish_every: int | None = None   # ingested blocks per ring publish;
+                                       # None → the active plan's cadence
+    ring_depth: int | None = None      # SnapshotRing slots; None → plan
+    queue_depth: int = 8               # bounded admission queue (blocks)
+    admission: str = "block"           # 'block' | 'shed' on queue-full
+
+    def __post_init__(self):
+        if self.publish_every is not None and self.publish_every < 1:
+            raise ValueError(
+                f"publish_every must be >= 1 or None, got "
+                f"{self.publish_every}")
+        if self.ring_depth is not None and self.ring_depth < 1:
+            raise ValueError(
+                f"ring_depth must be >= 1 or None, got {self.ring_depth}")
+        if self.queue_depth < 1:
+            raise ValueError(
+                f"queue_depth must be >= 1, got {self.queue_depth}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission {self.admission!r} not in "
+                             f"{ADMISSION_POLICIES}")
+
+    def resolved_publish_every(self) -> int:
+        """Blocks between ring publishes (None → the plan's cadence)."""
+        if self.publish_every is not None:
+            return self.publish_every
+        from repro.plan import active_plan
+        return active_plan().publish_every
+
+    def resolved_ring_depth(self) -> int:
+        """SnapshotRing depth (None → the plan's measured depth)."""
+        if self.ring_depth is not None:
+            return self.ring_depth
+        from repro.plan import active_plan
+        return active_plan().ring_depth

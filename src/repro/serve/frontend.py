@@ -1,0 +1,125 @@
+"""ServeFrontend — the serving tier's one consumer-facing read surface.
+
+Answers point / top-n / k-majority queries from the newest complete
+:class:`~repro.service.snapshot.QuerySnapshot` in a
+:class:`~repro.serve.ring.SnapshotRing`, planned and batched through the
+existing :class:`~repro.service.QueryFrontend` (same dispatched kernels,
+same bucketing) — the serving tier adds *which version answers* and
+*where the device wait is paid*, nothing about how a query runs.
+
+Every answer is **host-materialized before it is returned** and carries
+the ``version``/``n`` provenance of the snapshot that answered it. The
+materialization is the deliberate SLO hook: a jax array is a future, so
+an answer built from a just-published snapshot blocks *here*, on the
+reader, until the ring's async reduction lands — query latency as
+measured by ``bench_serve`` therefore includes the real freshness cost,
+and the ingest loop never pays it (the QPOPSS split).
+
+The sync methods are thread-safe (snapshots are immutable; the
+QueryFrontend is stateless) — bench reader threads call them directly.
+The ``a``-prefixed coroutines wrap them in a worker thread
+(``asyncio.to_thread``) so an asyncio server can issue queries without
+blocking its event loop on device waits.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+
+import numpy as np
+
+from repro.serve.ring import SnapshotRing
+from repro.service.frontend import FrequentItemsReport, QueryFrontend
+from repro.service.snapshot import QuerySnapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class PointEstimates:
+    """Batched point answers + the provenance of the snapshot that
+    produced them (lower ≤ f ≤ f_hat elementwise, per the paper)."""
+
+    version: int
+    n: int
+    f_hat: np.ndarray
+    lower: np.ndarray
+    monitored: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TopTable:
+    """Host-side top-n rows ({item, count, lower}) + provenance."""
+
+    version: int
+    n: int
+    rows: list
+
+
+class ServeFrontend:
+    """Ring-backed query surface: latest-complete reads, zero writer cost."""
+
+    def __init__(self, ring: SnapshotRing, frontend: QueryFrontend):
+        self.ring = ring
+        self.frontend = frontend
+
+    # -- snapshot selection --------------------------------------------------
+
+    def snapshot(self, *, min_version: int = 0,
+                 timeout: float | None = None) -> QuerySnapshot:
+        """The newest published snapshot (wait-free once one exists).
+
+        ``min_version`` turns the read into read-your-writes: block until
+        the ring has at least that version (``timeout`` bounds the wait).
+        Before any publish, waits for version 1 rather than failing.
+        """
+        snap = self.ring.latest()
+        if snap is not None and snap.version >= min_version:
+            return snap
+        return self.ring.wait_for(max(min_version, 1), timeout)
+
+    # -- queries (sync, thread-safe) -----------------------------------------
+
+    def estimate(self, queries, *, min_version: int = 0,
+                 timeout: float | None = None) -> PointEstimates:
+        """(f̂, lower, monitored) per query id from the latest snapshot."""
+        snap = self.snapshot(min_version=min_version, timeout=timeout)
+        f_hat, lower, mon = self.frontend.estimate(snap, queries)
+        return PointEstimates(version=snap.version, n=int(snap.n),
+                              f_hat=np.asarray(f_hat),
+                              lower=np.asarray(lower),
+                              monitored=np.asarray(mon))
+
+    def top_table(self, n: int = 10, *, min_version: int = 0,
+                  timeout: float | None = None) -> TopTable:
+        """Host-side top-n rows from the latest snapshot."""
+        snap = self.snapshot(min_version=min_version, timeout=timeout)
+        return TopTable(version=snap.version, n=int(snap.n),
+                        rows=self.frontend.top_table(snap, n))
+
+    def k_majority_report(self, k_majority: int, *, min_version: int = 0,
+                          timeout: float | None = None
+                          ) -> FrequentItemsReport:
+        """The paper's guarantee-split report from the latest snapshot
+        (already host-side and version-stamped by the QueryFrontend)."""
+        snap = self.snapshot(min_version=min_version, timeout=timeout)
+        return self.frontend.k_majority_report(snap, k_majority)
+
+    # -- queries (async) -----------------------------------------------------
+
+    async def aestimate(self, queries, *, min_version: int = 0,
+                        timeout: float | None = None) -> PointEstimates:
+        return await asyncio.to_thread(
+            self.estimate, queries, min_version=min_version,
+            timeout=timeout)
+
+    async def atop_table(self, n: int = 10, *, min_version: int = 0,
+                         timeout: float | None = None) -> TopTable:
+        return await asyncio.to_thread(
+            self.top_table, n, min_version=min_version, timeout=timeout)
+
+    async def ak_majority_report(self, k_majority: int, *,
+                                 min_version: int = 0,
+                                 timeout: float | None = None
+                                 ) -> FrequentItemsReport:
+        return await asyncio.to_thread(
+            self.k_majority_report, k_majority, min_version=min_version,
+            timeout=timeout)

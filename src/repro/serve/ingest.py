@@ -1,0 +1,252 @@
+"""IngestLoop — continuous StreamRuntime ingestion off a bounded queue.
+
+The write half of the serving tier (DESIGN.md §11): one daemon thread
+owns the runtime's :class:`SketchState` exclusively and drains a bounded
+admission queue of host stream blocks. Each block takes the exact path
+``StreamRuntime.feed`` takes — host-side canonical decomposition
+(``host_blocks``), async sharded ``device_put``, jitted ingest — so a
+served sketch is bitwise-identical to a batch-fed one over the same
+blocks (tested in tests/test_serve.py across every kernel impl).
+
+Throughput discipline, in order of importance:
+
+  * **ingestion never waits for readers.** Snapshots are published by
+    dispatching the reduction *asynchronously* and swapping the ring
+    pointer immediately; readers materialize their own answers.
+  * **the dispatch pipeline stays full.** After the first block the loop
+    threads its state through the runtime's DONATED ingest program (the
+    ``feed()`` discipline — buffers aliased in place, no per-step state
+    copy), and nothing on the loop path blocks on device results.
+  * **publishes fence donation, not dispatch.** The one ingest that
+    follows a publish runs through the NON-donating program: the
+    just-published snapshot's reduction still holds the state's buffers,
+    and donating them to the next ingest would hand XLA an aliasing
+    hazard. One extra state copy per publish interval is the entire cost
+    of a snapshot on the write path — which is exactly what the
+    PlanService's ``"publish"`` probe measures when it sizes the cadence.
+
+Admission control is the queue bound: ``submit`` blocks (backpressure) or
+sheds (counted, reported in :class:`IngestStats`) per the configured
+policy. ``drain()`` waits until everything submitted so far is ingested
+and publishes a final snapshot at exactly that stream position — the
+hook the bench harness's bitwise gate is built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+
+from repro.runtime.feed import host_blocks
+from repro.serve.ring import RingPublisher, SnapshotRing
+from repro.service.snapshot import QuerySnapshot
+
+_BLOCK, _PUBLISH, _STOP = "block", "publish", "stop"
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Host-side counters of one IngestLoop (read-only for consumers)."""
+
+    blocks_submitted: int = 0   # accepted into the queue
+    blocks_shed: int = 0        # rejected by 'shed' admission (queue full)
+    blocks_ingested: int = 0    # actually fed into the sketch
+    items_ingested: int = 0     # stream items across ingested blocks
+    publishes: int = 0          # snapshots published to the ring
+
+    def describe(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _Pending:
+    """A publish request: resolves to the snapshot (or the loop error)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.snapshot: QuerySnapshot | None = None
+
+    def resolve(self, snap):
+        self.snapshot = snap
+        self._event.set()
+
+    def wait(self, timeout=None) -> QuerySnapshot | None:
+        if not self._event.wait(timeout):
+            raise TimeoutError("publish request not served in time")
+        return self.snapshot
+
+
+class IngestLoop:
+    """Single consumer thread: queue → decompose → ingest → publish."""
+
+    def __init__(self, runtime, ring: SnapshotRing, *,
+                 publish_every: int, queue_depth: int = 8,
+                 admission: str = "block", state=None):
+        if publish_every < 1:
+            raise ValueError(
+                f"publish_every must be >= 1, got {publish_every}")
+        if admission not in ("block", "shed"):
+            raise ValueError(f"admission {admission!r} not in "
+                             f"('block', 'shed')")
+        self.runtime = runtime
+        self.ring = ring
+        self.publish_every = publish_every
+        self.admission = admission
+        self.stats = IngestStats()
+        self._publisher = RingPublisher(runtime, ring)
+        self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._state = state if state is not None else runtime.init()
+        self._error: BaseException | None = None
+        self._closed = False        # no further submissions accepted
+        self._thread = threading.Thread(
+            target=self._run, name="repro-serve-ingest", daemon=True)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "IngestLoop":
+        self._thread.start()
+        return self
+
+    def __enter__(self) -> "IngestLoop":
+        return self.start()
+
+    def __exit__(self, exc_type, *_):
+        self.stop(drain=exc_type is None)
+
+    @property
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    def _check_error(self):
+        if self._error is not None:
+            raise RuntimeError(
+                "IngestLoop failed; no further blocks will be ingested"
+            ) from self._error
+
+    # -- producer side -------------------------------------------------------
+
+    def submit(self, block, *, timeout: float | None = None) -> bool:
+        """Enqueue one (N,) host stream block; returns False iff shed.
+
+        ``'block'`` admission waits for queue space (raises ``queue.Full``
+        only if ``timeout`` expires — bounded backpressure); ``'shed'``
+        drops immediately on a full queue and counts the loss.
+        """
+        self._check_error()
+        if self._closed:
+            raise RuntimeError("IngestLoop is stopped; cannot submit")
+        if self.admission == "shed":
+            try:
+                self._queue.put_nowait((_BLOCK, block))
+            except queue.Full:
+                self.stats.blocks_shed += 1
+                return False
+        else:
+            self._queue.put((_BLOCK, block), timeout=timeout)
+        self.stats.blocks_submitted += 1
+        return True
+
+    def publish_now(self, timeout: float | None = None) -> QuerySnapshot:
+        """Queue-ordered snapshot publish: after everything submitted so
+        far, before anything submitted later. Blocks until served."""
+        self._check_error()
+        req = _Pending()
+        self._queue.put((_PUBLISH, req))
+        remaining = timeout
+        while True:                 # poll so a dead loop thread can't
+            try:                    # strand the waiter forever
+                snap = req.wait(0.1 if remaining is None
+                                else min(0.1, remaining))
+                break
+            except TimeoutError:
+                self._check_error()
+                if not self.running:
+                    raise RuntimeError(
+                        "IngestLoop thread exited before serving the "
+                        "publish request") from None
+                if remaining is not None:
+                    remaining -= 0.1
+                    if remaining <= 0:
+                        raise
+        self._check_error()
+        return snap
+
+    def drain(self, timeout: float | None = None) -> QuerySnapshot:
+        """Ingest everything already queued, then publish that position."""
+        return self.publish_now(timeout)
+
+    def stop(self, *, drain: bool = True,
+             timeout: float | None = None) -> QuerySnapshot | None:
+        """Stop the loop; with ``drain`` (default) finish queued work and
+        publish the final position first. Idempotent."""
+        snap = None
+        if self._closed:
+            self._thread.join(timeout)
+            return None
+        if drain and self.running and self._error is None:
+            snap = self.drain(timeout)
+        self._closed = True
+        if self.running:
+            self._queue.put((_STOP, None))
+        self._thread.join(timeout)
+        self._check_error()
+        return snap
+
+    # -- consumer side (the loop thread) ------------------------------------
+
+    def _run(self):
+        rt = self.runtime
+        chunk = rt.config.engine.chunk
+        sharding = rt.block_sharding()
+        ingest_plain = rt._ingest_blocks_fn
+        ingest_donated = rt._feed_ingest_fn
+        # first call must not donate the caller-provided initial state
+        donate_ok = False
+        since_publish = 0
+        try:
+            # version 0-of-this-loop: readers attached before the first
+            # block always find a complete (possibly empty) snapshot
+            self._publish()
+            while True:
+                kind, payload = self._queue.get()
+                if kind == _STOP:
+                    break
+                if kind == _PUBLISH:
+                    since_publish = 0
+                    donate_ok = False
+                    payload.resolve(self._publish())
+                    continue
+                block = host_blocks(np.asarray(payload), rt.workers, chunk)
+                if block.shape[-1]:
+                    dev = jax.device_put(block, sharding)
+                    fn = ingest_donated if donate_ok else ingest_plain
+                    self._state = fn(self._state, dev)
+                    donate_ok = True
+                    self.stats.items_ingested += int(
+                        np.asarray(payload).size)
+                self.stats.blocks_ingested += 1
+                since_publish += 1
+                if since_publish >= self.publish_every:
+                    since_publish = 0
+                    # the published reduction reads these state buffers;
+                    # the next ingest must not donate them (see module
+                    # docstring) — dispatch stays async either way
+                    donate_ok = False
+                    self._publish()
+        except BaseException as e:           # pragma: no cover - rethreaded
+            self._error = e
+            # unblock any publish waiters; they re-raise via _check_error
+            try:
+                while True:
+                    kind, payload = self._queue.get_nowait()
+                    if kind == _PUBLISH:
+                        payload.resolve(None)
+            except queue.Empty:
+                pass
+
+    def _publish(self) -> QuerySnapshot:
+        snap = self._publisher.publish(self._state)
+        self.stats.publishes += 1
+        return snap

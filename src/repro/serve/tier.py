@@ -1,0 +1,91 @@
+"""ServingTier — the assembled concurrent serving stack (DESIGN.md §11).
+
+One object composes the whole tier from a :class:`ServeConfig`:
+
+    StreamRuntime  ──►  IngestLoop (thread)  ──►  SnapshotRing
+         │                   ▲ bounded queue          │ atomic latest
+         └─ QueryFrontend ◄──┴── ServeFrontend ◄──────┘
+
+``submit()`` feeds host stream blocks through the bounded admission
+queue; the loop thread ingests them continuously and publishes a
+versioned snapshot to the ring every ``publish_every`` blocks (both the
+cadence and the ring depth resolve through the active ExecutionPlan when
+the config leaves them ``None``). ``frontend`` answers point / top-n /
+k-majority reads from the newest complete version with zero ingest-path
+interference. Use as a context manager for a drained, clean shutdown:
+
+    with ServingTier(ServeConfig(runtime=RuntimeConfig(...))) as tier:
+        for block in stream_blocks:
+            tier.submit(block)
+        report = tier.frontend.k_majority_report(100)
+"""
+from __future__ import annotations
+
+from repro.runtime import StreamRuntime
+from repro.serve.config import ServeConfig
+from repro.serve.frontend import ServeFrontend
+from repro.serve.ingest import IngestLoop
+from repro.serve.ring import SnapshotRing
+from repro.service.snapshot import QuerySnapshot
+
+
+class ServingTier:
+    """Runtime + ingest loop + ring + frontend, wired and lifecycled."""
+
+    def __init__(self, config: ServeConfig = ServeConfig(), *,
+                 runtime: StreamRuntime | None = None):
+        # an injected runtime lets several tiers (or a tier and a batch
+        # reference path) share one runtime's jitted programs — the bench
+        # harness leans on this so phases compare compute, not compiles
+        self.config = config
+        self.runtime = (runtime if runtime is not None
+                        else StreamRuntime(config.runtime))
+        self.publish_every = config.resolved_publish_every()
+        self.ring = SnapshotRing(config.resolved_ring_depth())
+        self.loop = IngestLoop(
+            self.runtime, self.ring, publish_every=self.publish_every,
+            queue_depth=config.queue_depth, admission=config.admission)
+        self.frontend = ServeFrontend(self.ring, self.runtime.frontend())
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ServingTier":
+        self.loop.start()
+        return self
+
+    def __enter__(self) -> "ServingTier":
+        return self.start()
+
+    def __exit__(self, exc_type, *_):
+        self.stop(drain=exc_type is None)
+
+    def stop(self, *, drain: bool = True) -> QuerySnapshot | None:
+        """Stop ingestion (draining queued blocks first by default)."""
+        return self.loop.stop(drain=drain)
+
+    # -- write path ----------------------------------------------------------
+
+    def submit(self, block, *, timeout: float | None = None) -> bool:
+        """Admit one (N,) host stream block (False iff shed)."""
+        return self.loop.submit(block, timeout=timeout)
+
+    def drain(self, timeout: float | None = None) -> QuerySnapshot:
+        """Ingest everything queued and publish exactly that position."""
+        return self.loop.drain(timeout)
+
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def stats(self):
+        return self.loop.stats
+
+    def describe(self) -> dict:
+        return {
+            "workers": self.runtime.workers,
+            "publish_every": self.publish_every,
+            "ring_depth": self.ring.depth,
+            "queue_depth": self.config.queue_depth,
+            "admission": self.config.admission,
+            "latest_version": self.ring.latest_version,
+            **self.stats.describe(),
+        }

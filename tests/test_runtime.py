@@ -27,7 +27,8 @@ from repro.core.parallel import block_decompose
 from repro.data.synthetic import zipf_stream
 from repro.engine import EngineConfig, SketchEngine
 from repro.runtime import (DeviceFeed, RuntimeConfig, StreamRuntime,
-                           host_blocks, parallel_spacesaving)
+                           host_block_iter, host_blocks,
+                           parallel_spacesaving)
 
 IMPLS = ((os.environ["REPRO_TEST_KERNEL"],)
          if os.environ.get("REPRO_TEST_KERNEL") else ("jnp", "sorted"))
@@ -250,6 +251,62 @@ def test_device_feed_preserves_order_and_depth():
     assert len(out) == 7
     for i, b in enumerate(out):
         np.testing.assert_array_equal(np.asarray(b), blocks[i])
+
+
+def test_host_block_iter_chunking_invariant():
+    # the emitted block sequence depends only on (workers, multiple,
+    # block_items) — never on how the producer happened to slice the
+    # stream into pieces
+    stream = np.asarray(zipf_stream(10_000, 1.3, seed=5, max_id=10**4))
+    bi = 4 * 32 * 2                 # two (workers × multiple) layers
+    ref = [host_blocks(stream[i:i + bi], 4, 32)
+           for i in range(0, stream.size, bi)]
+    for n_pieces in (1, 7, 23):
+        got = list(host_block_iter(np.array_split(stream, n_pieces),
+                                   4, 32, block_items=bi))
+        assert len(got) == len(ref)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_host_block_iter_pads_trailing_remainder():
+    # 10 items into a (4, 8) layer: same EMPTY padding host_blocks applies
+    stream = np.arange(10, dtype=np.int32)
+    (block,) = host_block_iter([stream], 4, 8, block_items=32)
+    np.testing.assert_array_equal(block, host_blocks(stream, 4, 8))
+
+
+def test_host_block_iter_is_lazy():
+    # an unbounded chunk generator must stream with O(block) memory —
+    # blocks come out while the input is still being produced
+    def endless():
+        i = 0
+        while True:
+            yield np.arange(i, i + 100, dtype=np.int32)
+            i += 100
+    it = host_block_iter(endless(), 2, 16, block_items=64)
+    first, second = next(it), next(it)
+    assert first.shape == second.shape == (2, 32)
+    np.testing.assert_array_equal(first.reshape(-1), np.arange(64))
+    np.testing.assert_array_equal(second.reshape(-1), np.arange(64, 128))
+
+
+def test_host_block_iter_drives_ingest_like_feed():
+    # streaming decomposition + DeviceFeed == rt.feed over the same block
+    # boundaries: the generator path changes memory footprint, not results
+    rt = _runtime(shards=1)
+    bi = rt.workers * CHUNK
+    stream = np.asarray(zipf_stream(3 * bi + 57, 1.1, seed=9, max_id=10**5))
+    ref = rt.feed(rt.init(),
+                  [stream[i:i + bi] for i in range(0, stream.size, bi)])
+    staged = DeviceFeed(
+        host_block_iter(np.array_split(stream, 11), rt.workers, CHUNK,
+                        block_items=bi),
+        sharding=rt.block_sharding())
+    state = rt.init()
+    for block in staged:
+        state = rt.ingest(state, block)
+    _states_equal(state, ref)
 
 
 # ---------------------------------------------------------------------------

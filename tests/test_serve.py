@@ -1,0 +1,375 @@
+"""Concurrent serving tier: ring semantics, ingest loop, frontend (§11).
+
+Covers the serving tier's three load-bearing contracts:
+
+  * **ring semantics** — versions are strictly monotonic, pinned reads
+    never silently cross stream positions (StaleSnapshotError on
+    eviction), and interleaved publish/read threads never observe a torn
+    or backwards-moving snapshot;
+  * **served ≡ synchronous** — a tier-ingested sketch is bitwise
+    identical to ``StreamRuntime`` ingesting the same blocks
+    synchronously, for every kernel impl including the fused megakernel
+    (interpret mode off-TPU, so sizes here stay small);
+  * **policy** — publish cadence counting, shed vs blocking admission,
+    error propagation out of the loop thread, and plan-resolved
+    publish_every/ring_depth knobs.
+
+``REPRO_TEST_KERNEL`` pins the impl sweep (CI kernel-matrix legs).
+"""
+import asyncio
+import os
+import queue
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import zipf_stream
+from repro.engine import EngineConfig
+from repro.runtime import RuntimeConfig, StreamRuntime, host_blocks
+from repro.serve import (IngestLoop, ServeConfig, ServeFrontend,
+                         ServingTier, SnapshotRing, StaleSnapshotError)
+
+IMPLS = ((os.environ["REPRO_TEST_KERNEL"],)
+         if os.environ.get("REPRO_TEST_KERNEL")
+         else ("jnp", "sorted", "fused"))
+
+K, LANES, CHUNK, DEPTH = 64, 2, 128, 2
+
+
+def _runtime(kernel="jnp"):
+    return StreamRuntime(RuntimeConfig(
+        engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                            buffer_depth=DEPTH, kernel=kernel),
+        shards=1))
+
+
+def _config(kernel="jnp", **kw):
+    kw.setdefault("publish_every", 2)
+    kw.setdefault("ring_depth", 3)
+    return ServeConfig(runtime=RuntimeConfig(
+        engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                            buffer_depth=DEPTH, kernel=kernel),
+        shards=1), **kw)
+
+
+def _blocks(rt, n_blocks, seed=0):
+    return [zipf_stream(rt.workers * CHUNK, 1.1, seed=seed + i,
+                        max_id=10**4) for i in range(n_blocks)]
+
+
+def _snap(version):
+    """A minimal immutable stand-in snapshot for pure ring tests."""
+    return types.SimpleNamespace(version=version, n=1000 + version)
+
+
+def _summaries_equal(a, b):
+    for name, x, y in zip(("items", "counts", "errors"), a.summary,
+                          b.summary):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"summary.{name}")
+    assert int(a.n) == int(b.n)
+
+
+# ---------------------------------------------------------------------------
+# SnapshotRing semantics
+# ---------------------------------------------------------------------------
+
+def test_ring_versions_strictly_monotonic():
+    ring = SnapshotRing(depth=2)
+    assert ring.latest() is None and ring.latest_version == 0
+    ring.publish(_snap(1))
+    ring.publish(_snap(2))
+    assert ring.latest_version == 2
+    with pytest.raises(ValueError, match="not after"):
+        ring.publish(_snap(2))      # republish
+    with pytest.raises(ValueError, match="not after"):
+        ring.publish(_snap(1))      # time travel
+    assert ring.latest_version == 2  # rejected publishes change nothing
+
+
+def test_ring_pinned_get_and_eviction():
+    ring = SnapshotRing(depth=2)
+    for v in (1, 2, 3, 4):
+        ring.publish(_snap(v))
+    assert ring.get(4).version == 4
+    assert ring.get(3).version == 3
+    # v1/v2 were overwritten by v3/v4 in a depth-2 ring
+    for stale in (1, 2):
+        with pytest.raises(StaleSnapshotError):
+            ring.get(stale)
+    with pytest.raises(StaleSnapshotError):
+        ring.get(5)                 # never published
+
+
+def test_ring_wait_for():
+    ring = SnapshotRing(depth=2)
+    with pytest.raises(TimeoutError):
+        ring.wait_for(1, timeout=0.05)
+    t = threading.Timer(0.05, lambda: ring.publish(_snap(1)))
+    t.start()
+    assert ring.wait_for(1, timeout=5.0).version == 1
+    t.join()
+
+
+def test_ring_concurrent_reads_never_torn_or_backwards():
+    """Readers racing a publisher: every observed snapshot is internally
+    consistent (its fields travel together) and versions never move
+    backwards within one reader."""
+    ring = SnapshotRing(depth=4)
+    stop = threading.Event()
+    errors: list = []
+
+    def read():
+        seen = 0
+        while not stop.is_set():
+            snap = ring.latest()
+            if snap is None:
+                continue
+            if snap.n != 1000 + snap.version:   # torn object (impossible
+                errors.append(("torn", snap.version, snap.n))   # by design)
+            if snap.version < seen:
+                errors.append(("backwards", seen, snap.version))
+            seen = snap.version
+            try:
+                pinned = ring.get(snap.version)
+                if pinned.version != snap.version:
+                    errors.append(("wrong-pin", snap.version, pinned.version))
+            except StaleSnapshotError:
+                pass                            # eviction race: detected, ok
+
+    readers = [threading.Thread(target=read) for _ in range(2)]
+    for t in readers:
+        t.start()
+    for v in range(1, 200):
+        ring.publish(_snap(v))
+        if v % 50 == 0:
+            time.sleep(0.001)       # let starved readers run on 1 core
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, errors[:5]
+    assert ring.latest_version == 199
+
+
+# ---------------------------------------------------------------------------
+# IngestLoop: served ≡ synchronous, per kernel impl
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernel_matrix
+@pytest.mark.parametrize("impl", IMPLS)
+def test_tier_bitwise_identical_to_sync_ingest(impl):
+    rt = _runtime(impl)
+    blocks = _blocks(rt, 5)
+
+    state = rt.init()
+    for b in blocks:
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    ref = rt.snapshot(state)
+
+    with ServingTier(_config(impl), runtime=rt) as tier:
+        for b in blocks:
+            assert tier.submit(b)
+        snap = tier.drain()
+        # the drained snapshot is the ring's latest — readers see this
+        # exact stream position
+        assert tier.ring.latest().version == snap.version
+    _summaries_equal(ref, snap)
+
+
+def test_publish_cadence_counts():
+    rt = _runtime()
+    with ServingTier(_config(publish_every=2), runtime=rt) as tier:
+        for b in _blocks(rt, 5):
+            tier.submit(b)
+        snap = tier.drain()
+        stats = tier.stats
+        # one initial publish on start + cadence publishes after blocks
+        # 2 and 4 + the drain publish after block 5
+        assert stats.publishes == 4
+        assert stats.blocks_submitted == stats.blocks_ingested == 5
+        assert stats.items_ingested == 5 * rt.workers * CHUNK
+        assert stats.blocks_shed == 0
+        assert tier.ring.latest_version == snap.version
+
+
+def test_shed_admission_counts_drops():
+    rt = _runtime()
+    ring = SnapshotRing(depth=2)
+    # loop NOT started: the queue can only fill
+    loop = IngestLoop(rt, ring, publish_every=4, queue_depth=1,
+                      admission="shed")
+    assert loop.submit(np.arange(8, dtype=np.int32)) is True
+    assert loop.submit(np.arange(8, dtype=np.int32)) is False
+    assert loop.stats.blocks_shed == 1
+    assert loop.stats.blocks_submitted == 1
+
+
+def test_block_admission_backpressure_timeout():
+    rt = _runtime()
+    loop = IngestLoop(rt, SnapshotRing(depth=2), publish_every=4,
+                      queue_depth=1, admission="block")
+    assert loop.submit(np.arange(8, dtype=np.int32))
+    with pytest.raises(queue.Full):
+        loop.submit(np.arange(8, dtype=np.int32), timeout=0.05)
+
+
+def test_loop_error_propagates_to_producers():
+    rt = _runtime()
+    loop = IngestLoop(rt, SnapshotRing(depth=2), publish_every=4).start()
+    # a 3-d payload cannot be block-decomposed: the loop thread dies with
+    # the real exception chained, and every later producer call reports it
+    loop.submit(np.zeros((2, 3, 4), dtype=np.int32))
+    with pytest.raises(RuntimeError, match="IngestLoop"):
+        loop.drain(timeout=10)
+        loop.submit(np.arange(8, dtype=np.int32))  # pragma: no cover
+    with pytest.raises(RuntimeError):
+        loop.submit(np.arange(8, dtype=np.int32))
+
+
+def test_tier_stop_is_idempotent():
+    rt = _runtime()
+    tier = ServingTier(_config(), runtime=rt).start()
+    tier.submit(_blocks(rt, 1)[0])
+    snap = tier.stop()
+    assert snap is not None and int(snap.n) == rt.workers * CHUNK
+    assert tier.stop() is None      # second stop: clean no-op
+    with pytest.raises(RuntimeError, match="stopped"):
+        tier.submit(_blocks(rt, 1)[0])
+
+
+# ---------------------------------------------------------------------------
+# ServeFrontend
+# ---------------------------------------------------------------------------
+
+def test_frontend_sync_and_async_answers_match():
+    rt = _runtime()
+    with ServingTier(_config(), runtime=rt) as tier:
+        for b in _blocks(rt, 4):
+            tier.submit(b)
+        snap = tier.drain()
+
+        est = tier.frontend.estimate([1, 2, 3], min_version=snap.version)
+        top = tier.frontend.top_table(3, min_version=snap.version)
+        rep = tier.frontend.k_majority_report(16, min_version=snap.version)
+        assert est.version == top.version == rep.version == snap.version
+        assert est.n == top.n == rep.n == int(snap.n)
+        assert (est.lower <= est.f_hat).all()
+
+        async def roundtrip():
+            return await asyncio.gather(
+                tier.frontend.aestimate([1, 2, 3],
+                                        min_version=snap.version),
+                tier.frontend.atop_table(3, min_version=snap.version),
+                tier.frontend.ak_majority_report(
+                    16, min_version=snap.version))
+
+        aest, atop, arep = asyncio.run(roundtrip())
+        np.testing.assert_array_equal(aest.f_hat, est.f_hat)
+        assert [r["item"] for r in atop.rows] == \
+            [r["item"] for r in top.rows]
+        np.testing.assert_array_equal(arep.guaranteed_items,
+                                      rep.guaranteed_items)
+
+
+def test_frontend_times_out_before_first_publish():
+    rt = _runtime()
+    frontend = ServeFrontend(SnapshotRing(depth=2), rt.frontend())
+    with pytest.raises(TimeoutError):
+        frontend.estimate([1, 2], timeout=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Config + plan knobs
+# ---------------------------------------------------------------------------
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="admission"):
+        ServeConfig(admission="drop")
+    with pytest.raises(ValueError, match="queue_depth"):
+        ServeConfig(queue_depth=0)
+    with pytest.raises(ValueError, match="publish_every"):
+        ServeConfig(publish_every=0)
+    with pytest.raises(ValueError, match="ring_depth"):
+        ServeConfig(ring_depth=-1)
+
+
+def test_serve_config_resolves_through_plan():
+    import dataclasses
+
+    from repro.plan import active_plan, use_plan
+
+    plan = dataclasses.replace(active_plan(), publish_every=7, ring_depth=5)
+    with use_plan(plan):
+        cfg = ServeConfig()
+        assert cfg.resolved_publish_every() == 7
+        assert cfg.resolved_ring_depth() == 5
+        # explicit knobs always beat the plan
+        pinned = ServeConfig(publish_every=3, ring_depth=2)
+        assert pinned.resolved_publish_every() == 3
+        assert pinned.resolved_ring_depth() == 2
+
+
+def test_plan_roundtrips_publish_knobs(tmp_path):
+    import dataclasses
+    import json
+
+    from repro.plan import ExecutionPlan, active_plan
+
+    plan = dataclasses.replace(active_plan(), publish_every=3, ring_depth=9)
+    d = plan.to_json()
+    assert d["publish_every"] == 3 and d["ring_depth"] == 9
+    back = ExecutionPlan.from_json(d)
+    assert back.publish_every == 3 and back.ring_depth == 9
+    # plans cached before the serving tier existed load with the
+    # documented static defaults
+    legacy = {k: v for k, v in d.items()
+              if k not in ("publish_every", "ring_depth")}
+    old = ExecutionPlan.from_json(json.loads(json.dumps(legacy)))
+    assert old.publish_every == 8 and old.ring_depth == 4
+    with pytest.raises(ValueError):
+        dataclasses.replace(plan, publish_every=0)
+
+
+def test_choose_publish_cadence_from_probe_rows():
+    from repro.launch.tune import _choose_publish
+
+    rows = [{"k": 256, "publish_per_step": 0.05},
+            {"k": 2048, "publish_per_step": 0.35}]
+    every, depth = _choose_publish(rows, budget=0.1)
+    assert every == 4               # ceil(0.35 / 0.1): the largest-k row
+    assert depth == 3               # 2 + ceil(0.35 / 4)
+    assert _choose_publish([]) == (8, 4)
+    every, depth = _choose_publish([{"k": 64, "publish_per_step": 1e5}])
+    assert every == 256 and depth == 16     # both knobs clamp
+
+
+# ---------------------------------------------------------------------------
+# Liveness under interleaved submit/read (the tier's whole point)
+# ---------------------------------------------------------------------------
+
+def test_reads_interleave_with_ingestion():
+    """Readers polling mid-stream observe monotonically growing (version,
+    n) pairs and the final drain position — no reader ever blocks
+    ingestion, no stale-beyond-ring answer is served."""
+    rt = _runtime()
+    with ServingTier(_config(publish_every=1, ring_depth=4),
+                     runtime=rt) as tier:
+        seen = []
+        for b in _blocks(rt, 6):
+            tier.submit(b)
+            top = tier.frontend.top_table(2)
+            seen.append((top.version, top.n))
+        snap = tier.drain()
+        versions = [v for v, _ in seen]
+        ns = [n for _, n in seen]
+        assert versions == sorted(versions)
+        assert ns == sorted(ns)
+        assert tier.frontend.top_table(1).version == snap.version
+        # every answer's n is a real prefix position: a multiple of one
+        # block, never beyond what was submitted at the time
+        block_n = rt.workers * CHUNK
+        for i, n in enumerate(ns):
+            assert n % block_n == 0 and n <= (i + 1) * block_n
