@@ -1,5 +1,6 @@
 """Serve a small model with batched requests: prefill + decode loop, KV
-cache management, and hot-token Space Saving telemetry.
+cache management, and hot-token Space Saving telemetry — emitted as
+structured obs events, with the full metrics registry dumped on exit.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,5 +12,5 @@ if __name__ == "__main__":
     args = sys.argv[1:]
     defaults = ["--arch", "qwen2.5-14b", "--smoke",
                 "--batch", "4", "--prompt-len", "64", "--gen", "32",
-                "--report-every", "16"]
+                "--report-every", "16", "--metrics-dump"]
     main(defaults + args)

@@ -40,6 +40,7 @@ from repro.engine.config import EngineConfig
 from repro.engine.reductions import get_reduction
 from repro.engine.state import (SketchState, empty_buffer, flushed_summary,
                                 init_state, replayed_summary)
+from repro.obs import metrics as obs_metrics
 
 
 def _accepts_kwarg(fn, name: str) -> bool:
@@ -84,7 +85,20 @@ class SketchEngine:
         # ownership loop) and not the default.
         donate = (0,) if config.donate_state else ()
         self.update = jax.jit(self._update, donate_argnums=donate)
-        self.flush = jax.jit(self._flush, donate_argnums=donate)
+        # explicit host-initiated flushes are counted in the process
+        # registry (deferred auto-flushes run inside jitted programs and
+        # are derivable as ingested_chunks / buffer_depth); the wrapper
+        # keeps self.flush's call signature identical
+        self._m_flushes = obs_metrics.DEFAULT.counter("engine.flush_calls")
+        self._m_snapshots = obs_metrics.DEFAULT.counter(
+            "engine.snapshot_publishes")
+        _flush_jit = jax.jit(self._flush, donate_argnums=donate)
+
+        def _counted_flush(state):
+            self._m_flushes.inc()
+            return _flush_jit(state)
+
+        self.flush = _counted_flush
         self.ingest = jax.jit(self._ingest, donate_argnums=donate)
         self.merged = jax.jit(self._merged)
         self.absorb_histogram = jax.jit(self._absorb_histogram)
@@ -215,6 +229,7 @@ class SketchEngine:
         """
         from repro.service.snapshot import publish
         summary, n_total, shard_n = self._snapshot_arrays(state)
+        self._m_snapshots.inc()
         return publish(summary, n_total, shard_n,
                        version=next(self._versions),
                        kernel=self.config.resolved_kernel())

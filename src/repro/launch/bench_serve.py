@@ -15,9 +15,13 @@ jitted programs, so phases compare compute, not compiles):
      readers — the reader-free sustained updates/sec.
   4. **loaded**: a fresh tier ingests the identical stream while reader
      threads fire point / top-n / k-majority queries at a throttled
-     aggregate ``--qps`` against the ring, recording per-op wall-clock
-     latency (which *includes* snapshot materialization — the reader
-     pays the freshness cost, by design).
+     aggregate ``--qps`` against the ring. Per-op wall-clock latency
+     (which *includes* snapshot materialization — the reader pays the
+     freshness cost, by design) comes from the tier's OWN
+     ``serve.read.{op}_s`` histograms (repro.obs.metrics): the bench
+     reports exactly what a live tier exports, percentiles bucketized
+     with the recorded ``bucket_error_bound`` instead of re-derived
+     from private sample lists.
 
 ``--check`` gates (the CI serve-smoke leg):
 
@@ -48,14 +52,6 @@ from pathlib import Path
 QUERY_OPS = ("point", "top", "kmaj")
 
 
-def _percentile(samples, q) -> float:
-    if not samples:
-        return float("nan")
-    xs = sorted(samples)
-    idx = min(len(xs) - 1, max(0, int(math.ceil(q / 100 * len(xs))) - 1))
-    return xs[idx]
-
-
 def _snapshot_digest(snap):
     """Host copies of the summary leaves + n (phase-comparable identity)."""
     import numpy as np
@@ -69,26 +65,26 @@ def _digests_equal(a, b) -> bool:
         bool((x == y).all()) for x, y in zip(leaves_a, leaves_b))
 
 
-def _reader(frontend, stop, out, *, queries, kmaj, period, offset):
+def _reader(frontend, stop, *, queries, kmaj, period, offset):
     """One reader thread: round-robin op mix, throttled to ``1/period`` qps.
 
-    Latency is wall-clock around the frontend call — it includes the ring
-    lookup, the batched query dispatch, AND the host materialization of
-    the answer (the device wait a real consumer pays).
+    The reader does NOT time its own calls: the instrumented
+    :class:`~repro.serve.ServeFrontend` records wall-clock latency —
+    ring lookup + batched query dispatch + host materialization of the
+    answer (the device wait a real consumer pays) — into the tier's
+    ``serve.read.{op}_s`` histograms.
     """
     i = offset
     nxt = time.perf_counter()
     while not stop.is_set():
         op = QUERY_OPS[i % len(QUERY_OPS)]
         i += 1
-        t0 = time.perf_counter()
         if op == "point":
             frontend.estimate(queries)
         elif op == "top":
             frontend.top_table(10)
         else:
             frontend.k_majority_report(kmaj)
-        out[op].append(time.perf_counter() - t0)
         if period:
             nxt += period
             delay = nxt - time.perf_counter()
@@ -100,14 +96,20 @@ def _reader(frontend, stop, out, *, queries, kmaj, period, offset):
 
 def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
               admission, readers=0, qps=0.0, queries=None, kmaj=64,
-              warm_queries=False):
-    """One tier phase: submit every block, drain, return measurements."""
+              warm_queries=False, metrics=True):
+    """One tier phase: submit every block, drain, return measurements.
+
+    ``metrics=False`` runs the tier on no-op instruments — the
+    metrics-off arm of the overhead gate (``launch/bench_obs.py`` reuses
+    this phase runner for both arms).
+    """
     from repro.runtime import RuntimeConfig  # noqa: F401  (doc anchor)
     from repro.serve import ServeConfig, ServingTier
 
     cfg = ServeConfig(runtime=runtime.config, publish_every=publish_every,
                       ring_depth=ring_depth, queue_depth=queue_depth,
-                      admission=admission)
+                      admission=admission, metrics=metrics,
+                      health_k_majority=kmaj)
     tier = ServingTier(cfg, runtime=runtime).start()
     try:
         if warm_queries:
@@ -116,15 +118,13 @@ def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
             tier.frontend.k_majority_report(kmaj)
 
         stop = threading.Event()
-        outs, threads = [], []
+        threads = []
         period = readers / qps if (readers and qps) else 0.0
         for r in range(readers):
-            out = {op: [] for op in QUERY_OPS}
             t = threading.Thread(
-                target=_reader, args=(tier.frontend, stop, out),
+                target=_reader, args=(tier.frontend, stop),
                 kwargs=dict(queries=queries, kmaj=kmaj, period=period,
                             offset=r), daemon=True)
-            outs.append(out)
             threads.append(t)
             t.start()
 
@@ -138,13 +138,24 @@ def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
         for t in threads:
             t.join()
         stats = tier.stats.describe()
+        # per-op read latency straight from the tier's own histograms —
+        # the same numbers ``ServingTier.describe()`` exports live
+        query_stats = {}
+        for op in QUERY_OPS:
+            d = tier.registry.histogram(f"serve.read.{op}_s").describe()
+            query_stats[op] = {
+                "count": d["count"],
+                "p50_s": d.get("p50", float("nan")),
+                "p99_s": d.get("p99", float("nan")),
+                "mean_s": d.get("mean", float("nan")),
+                "bucket_error_bound": d.get("error_bound", 0.0),
+            }
+        health = tier.health_report() if metrics else None
     finally:
         tier.stop(drain=False)
 
-    latencies = {op: [s for out in outs for s in out[op]]
-                 for op in QUERY_OPS}
     return {"elapsed_s": elapsed, "snapshot": _snapshot_digest(snap),
-            "stats": stats, "latencies": latencies}
+            "stats": stats, "queries": query_stats, "health": health}
 
 
 def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
@@ -202,7 +213,8 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
         load_ups = items_total / load["elapsed_s"]
         load_ok = _digests_equal(load["snapshot"], reference)
         ratio = load_ups / base_ups
-        reads = sum(len(v) for v in load["latencies"].values())
+        query_stats = load["queries"]
+        reads = sum(q["count"] for q in query_stats.values())
         achieved_qps = reads / load["elapsed_s"]
         emit(f"serve_{impl}_loaded_updates_per_s", f"{load_ups:.4e}",
              f"readers={readers};qps={achieved_qps:.1f}")
@@ -212,19 +224,11 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
              str(base_ok and load_ok).lower(),
              f"baseline={base_ok};loaded={load_ok}")
 
-        query_stats = {}
-        for op, samples in load["latencies"].items():
-            query_stats[op] = {
-                "count": len(samples),
-                "p50_s": _percentile(samples, 50),
-                "p99_s": _percentile(samples, 99),
-                "mean_s": (sum(samples) / len(samples)) if samples
-                else float("nan"),
-            }
-            emit(f"serve_{impl}_{op}_p50", f"{query_stats[op]['p50_s']:.4e}",
-                 f"n={len(samples)}")
-            emit(f"serve_{impl}_{op}_p99", f"{query_stats[op]['p99_s']:.4e}",
-                 f"n={len(samples)}")
+        for op, q in query_stats.items():
+            emit(f"serve_{impl}_{op}_p50", f"{q['p50_s']:.4e}",
+                 f"n={q['count']};bucketized±{q['bucket_error_bound']:.0%}")
+            emit(f"serve_{impl}_{op}_p99", f"{q['p99_s']:.4e}",
+                 f"n={q['count']}")
 
         results[impl] = {
             "block_items": block_items,
@@ -239,7 +243,8 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
                        "reads_total": reads,
                        "achieved_qps": achieved_qps,
                        "queries": query_stats,
-                       "stats": load["stats"]},
+                       "stats": load["stats"],
+                       "health": load["health"]},
             "ingest_ratio": ratio,
         }
 

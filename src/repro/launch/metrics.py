@@ -1,0 +1,105 @@
+"""Metrics dump CLI — watch a live ServingTier's observable surface.
+
+Runs a small seeded tier (zipf stream through the full submit → ingest →
+publish path, plus a few frontend reads so every read histogram has
+samples) and prints what a live deployment would export (DESIGN.md §12):
+
+  ``--format json``   ``ServingTier.describe()`` — config, consistent
+                      ingest stats, the tier registry dump, the latest
+                      sketch-native health — plus the process-default
+                      registry (engine / runtime / plan counters);
+  ``--format prom``   both registries in Prometheus text exposition
+                      format (the scrape-endpoint view);
+  ``--events N``      additionally print the last N tier trace events as
+                      JSON lines (the span ring).
+
+  python -m repro.launch.metrics                      # JSON dump
+  python -m repro.launch.metrics --format prom
+  python -m repro.launch.metrics --events 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def run_tier_dump(*, k=256, lanes=2, chunk=512, depth=2, blocks=16,
+                  layers=2, publish_every=2, ring_depth=4, kmaj=64,
+                  seed=0):
+    """One small tier run → (describe dict, tier registry, tier tracer)."""
+    import numpy as np
+
+    from repro.data.synthetic import zipf_stream
+    from repro.engine import EngineConfig
+    from repro.runtime import RuntimeConfig, StreamRuntime
+    from repro.serve import ServeConfig, ServingTier
+
+    cfg = ServeConfig(
+        runtime=RuntimeConfig(
+            engine=EngineConfig(k=k, tenants=lanes, chunk=chunk,
+                                buffer_depth=depth),
+            shards=1),
+        publish_every=publish_every, ring_depth=ring_depth,
+        health_k_majority=kmaj)
+    tier = ServingTier(cfg)
+    block_items = tier.runtime.workers * chunk * layers
+    queries = np.asarray(
+        np.random.default_rng(seed).integers(0, 10**5, size=8)
+        .astype(np.int32))
+    with tier:
+        for i in range(blocks):
+            tier.submit(zipf_stream(block_items, 1.2, seed=seed + i,
+                                    max_id=10**5))
+        tier.drain()
+        # exercise every read op so serve.read.* histograms have samples
+        tier.frontend.estimate(queries)
+        tier.frontend.top_table(10)
+        tier.frontend.k_majority_report(kmaj)
+        tier.health_report()
+        desc = tier.describe()
+    return desc, tier.registry, tier.tracer
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--format", default="json", choices=("json", "prom"))
+    ap.add_argument("--events", type=int, default=0,
+                    help="also print the last N trace events (JSON lines)")
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--blocks", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--publish-every", type=int, default=2)
+    ap.add_argument("--ring-depth", type=int, default=4)
+    ap.add_argument("--k-majority", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.obs import metrics as obs_metrics
+
+    desc, registry, tracer = run_tier_dump(
+        k=args.k, lanes=args.lanes, chunk=args.chunk, depth=args.depth,
+        blocks=args.blocks, layers=args.layers,
+        publish_every=args.publish_every, ring_depth=args.ring_depth,
+        kmaj=args.k_majority, seed=args.seed)
+
+    if args.format == "prom":
+        sys.stdout.write(registry.prometheus())
+        sys.stdout.write(obs_metrics.DEFAULT.prometheus())
+    else:
+        print(json.dumps(
+            {"tier": desc, "process": obs_metrics.DEFAULT.describe()},
+            indent=2, default=str))
+    if args.events:
+        out = tracer.to_jsonl(last=args.events)
+        if out:
+            print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,12 +11,19 @@ appending to it) and answers hot-token queries through the ring's
 — k = O(1) memory regardless of traffic, and the published versions
 remain readable by any concurrent consumer of the ring.
 
+Telemetry goes through the obs layer (DESIGN.md §12): spans around
+prefill / decode / each report tick on the process tracer, structured
+``[name] key=value`` lines instead of ad-hoc prints, and a decode-step
+dispatch histogram in the process registry. ``--metrics-dump`` prints
+the full registry + the trace-event tail as JSON on exit.
+
   python -m repro.launch.serve --arch mamba2-130m --smoke \
-      --batch 4 --prompt-len 64 --gen 64
+      --batch 4 --prompt-len 64 --gen 64 --metrics-dump
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -26,6 +33,8 @@ import numpy as np
 from repro.configs.registry import get_arch, get_smoke_arch
 from repro.data.synthetic import TokenStream
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import RingPublisher, ServeFrontend, SnapshotRing
 from repro.sharding.rules import ShardingPlan
 from repro.train import steps as S
@@ -43,7 +52,15 @@ def main(argv=None):
     ap.add_argument("--k-majority", type=int, default=16,
                     help="k for the guarantee-split frequent-token report")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the process metrics registry + trace "
+                         "tail as JSON on exit")
     args = ap.parse_args(argv)
+
+    T = obs_trace.DEFAULT
+    reg = obs_metrics.DEFAULT
+    m_step = reg.histogram("serve.decode.step_s")   # per-step dispatch
+    m_tokens = reg.counter("serve.decode.tokens")
 
     cfg = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
     plan = ShardingPlan(cfg, None)
@@ -59,7 +76,9 @@ def main(argv=None):
     batch.update({k: jnp.asarray(v) for k, v in data.extras(cfg).items()})
 
     t0 = time.time()
-    last_logits, cache = prefill(params, batch)
+    with T.span("serve.prefill", batch=args.batch,
+                prompt_len=args.prompt_len):
+        last_logits, cache = prefill(params, batch)
     # pad the prompt-sized cache out to max_len for the decode loop
     def pad_seq(a, target, axis):
         pad = [(0, 0)] * a.ndim
@@ -75,8 +94,8 @@ def main(argv=None):
     if cfg.family == "hybrid":
         for k in ("shared_k", "shared_v"):
             cache[k] = pad_seq(cache[k], max_len, 2)
-    print(f"[serve] prefill {args.batch}×{args.prompt_len} in "
-          f"{time.time()-t0:.2f}s")
+    T.log("serve.prefill.done", batch=args.batch,
+          prompt_len=args.prompt_len, elapsed_s=time.time() - t0)
 
     # same group count as make_serve_step's engine (1 on this null plan);
     # chunk = the decode payload (B tokens/step) so buffer slots hold real
@@ -96,29 +115,45 @@ def main(argv=None):
     tokens = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
     emitted = []
     t0 = time.time()
-    for i in range(args.gen):
-        pos = args.prompt_len + i
-        tokens_next, cache, sketch = serve(params, cache, tokens, pos, sketch)
-        # device-side accumulation: np.asarray here would block the loop
-        # on every step's transfer; one host sync after the loop instead
-        emitted.append(tokens_next)
-        tokens = tokens_next[:, None]
-        if (i + 1) % args.report_every == 0:
-            # publish a frozen view into the ring; the decode loop's
-            # ingest buffer is untouched and keeps filling between reports
-            snap = publisher.publish(sketch)
-            hot = telemetry.top_table(5)
-            rep = telemetry.k_majority_report(args.k_majority)
-            print(f"  [hot-tokens @ {i+1} v{snap.version} n={hot.n}] "
-                  + ", ".join(f"{r['item']}:{r['count']}" for r in hot.rows)
-                  + f" | {args.k_majority}-majority: "
-                  f"{rep.guaranteed_items.size} guaranteed + "
-                  f"{rep.unconfirmed_items.size} candidate")
+    with T.span("serve.decode", gen=args.gen, batch=args.batch):
+        for i in range(args.gen):
+            pos = args.prompt_len + i
+            # the histogram times the host-side DISPATCH of the async
+            # step (enqueue cost), not device compute — a stall here
+            # means the host fell behind the device, the signal that
+            # matters for the decode loop
+            with m_step.time():
+                tokens_next, cache, sketch = serve(
+                    params, cache, tokens, pos, sketch)
+            m_tokens.inc(args.batch)
+            # device-side accumulation: np.asarray here would block the
+            # loop on every step's transfer; one host sync after the loop
+            emitted.append(tokens_next)
+            tokens = tokens_next[:, None]
+            if (i + 1) % args.report_every == 0:
+                # publish a frozen view into the ring; the decode loop's
+                # ingest buffer is untouched and keeps filling between
+                # reports
+                with T.span("serve.report", step=i + 1):
+                    snap = publisher.publish(sketch)
+                    hot = telemetry.top_table(5)
+                    rep = telemetry.k_majority_report(args.k_majority)
+                T.log("serve.hot_tokens", step=i + 1,
+                      version=snap.version, n=int(hot.n),
+                      top=",".join(f"{r['item']}:{r['count']}"
+                                   for r in hot.rows),
+                      k_majority=args.k_majority,
+                      guaranteed=int(rep.guaranteed_items.size),
+                      candidate=int(rep.unconfirmed_items.size))
     sample = np.asarray(jnp.stack(emitted, 1))     # the one host transfer
     dt = time.time() - t0
-    print(f"[serve] generated {args.gen}×{args.batch} tokens in {dt:.2f}s "
-          f"({args.gen*args.batch/dt:.1f} tok/s)")
-    print("[serve] sample:", sample[0][:16].tolist())
+    T.log("serve.decode.done", gen=args.gen, batch=args.batch,
+          elapsed_s=dt, tok_per_s=args.gen * args.batch / dt)
+    T.log("serve.sample", tokens=str(sample[0][:16].tolist()))
+    if args.metrics_dump:
+        print(json.dumps({"metrics": reg.describe(),
+                          "events": T.events()[-64:]}, indent=2,
+                         default=str))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""Observability — metrics, trace spans, and sketch-native health.
+
+The serving stack's sensor layer (DESIGN.md §12), three orthogonal
+pieces threaded through every serving component:
+
+  * :mod:`repro.obs.metrics` — thread-safe counters / gauges /
+    fixed-bucket histograms with O(1) allocation-free recording, plain
+    dict + Prometheus exports, and a no-op NULL registry whose cost is
+    the overhead gate's baseline (``launch/bench_obs.py``);
+  * :mod:`repro.obs.trace` — nested span context managers over a
+    bounded JSON-lines event ring, with optional
+    ``jax.profiler.TraceAnnotation`` pass-through;
+  * :mod:`repro.obs.health` — gauges derived from each published
+    :class:`~repro.service.snapshot.QuerySnapshot`: the live ε bound
+    (min-count), occupancy, saturation, and the k-majority guarantee
+    split, bitwise-consistent with the eval harness's oracle-free
+    invariants and refreshed off the ring by a reader-side monitor.
+
+Dump the live surface with ``python -m repro.launch.metrics`` or read
+``ServingTier.describe()``.
+"""
+from repro.obs.health import HealthGauges, HealthMonitor, sketch_health
+from repro.obs.metrics import (DEFAULT as DEFAULT_REGISTRY, NULL as
+                               NULL_REGISTRY, Counter, Gauge, Histogram,
+                               MetricsRegistry, default_registry,
+                               log_bounds)
+from repro.obs.trace import (DEFAULT as DEFAULT_TRACER, NULL as
+                             NULL_TRACER, Tracer, event, fmt_event, log,
+                             span)
+
+__all__ = [
+    "Counter", "DEFAULT_REGISTRY", "DEFAULT_TRACER", "Gauge",
+    "HealthGauges", "HealthMonitor", "Histogram", "MetricsRegistry",
+    "NULL_REGISTRY", "NULL_TRACER", "Tracer", "default_registry",
+    "event", "fmt_event", "log", "log_bounds", "sketch_health", "span",
+]

@@ -29,12 +29,23 @@ import contextlib
 import os
 from pathlib import Path
 
+from repro.obs import metrics as obs_metrics
 from repro.plan.fingerprint import device_fingerprint, plan_path
 from repro.plan.plan import ExecutionPlan, static_plan
 
 _installed: ExecutionPlan | None = None
 _file_cache: dict = {}     # path -> (mtime_ns, ExecutionPlan)
 _generation = 0            # bumps whenever resolution answers may change
+
+# process-wide counters over which precedence branch answered (DESIGN.md
+# §12): together they make "which plan is this job actually running on?"
+# a metrics query instead of a log archaeology session
+_m_resolutions = obs_metrics.DEFAULT.counter("plan.active_resolutions")
+_m_installed = obs_metrics.DEFAULT.counter("plan.installed_hits")
+_m_env = obs_metrics.DEFAULT.counter("plan.env_hits")
+_m_cache = obs_metrics.DEFAULT.counter("plan.cache_hits")
+_m_static = obs_metrics.DEFAULT.counter("plan.static_fallbacks")
+_m_impl = obs_metrics.DEFAULT.counter("plan.impl_resolutions")
 
 
 def generation() -> int:
@@ -93,7 +104,9 @@ def _load(path: Path) -> ExecutionPlan | None:
 
 def active_plan() -> ExecutionPlan:
     """The plan every "auto" in this process resolves through."""
+    _m_resolutions.inc()
     if _installed is not None:
+        _m_installed.inc()
         return _installed
     env = os.environ.get("REPRO_PLAN_FILE")
     if env:
@@ -106,11 +119,14 @@ def active_plan() -> ExecutionPlan:
                 f"$REPRO_PLAN_FILE={env!r} is missing or not a valid "
                 f"plan JSON; unset it to fall back to the plan cache / "
                 f"static heuristics")
+        _m_env.inc()
         return plan
     fp = device_fingerprint()
     plan = _load(plan_path(fp))
     if plan is not None and plan.fingerprint == fp:
+        _m_cache.inc()
         return plan
+    _m_static.inc()
     return static_plan(fp)
 
 
@@ -122,6 +138,7 @@ def resolve_impl(op: str, k: int, *, plan: ExecutionPlan | None = None) -> str:
     the QueryFrontend. ``k`` is the counter budget of the summary being
     dispatched on — the axis the dense↔sorted crossover moves along.
     """
+    _m_impl.inc()
     return (plan or active_plan()).impl_for(op, int(k))
 
 

@@ -49,6 +49,7 @@ from repro.core.parallel import block_decompose
 from repro.core.spacesaving import Summary
 from repro.engine import SketchEngine
 from repro.engine.state import SketchState
+from repro.obs import metrics as obs_metrics
 from repro.runtime.config import RuntimeConfig
 from repro.runtime.feed import DeviceFeed, host_blocks
 
@@ -263,15 +264,25 @@ class StreamRuntime:
         never donated (the first step uses the non-donating program), so
         it stays valid after feed() returns.
         """
+        import time as _time
         chunk = self.config.engine.chunk
         staged = (host_blocks(b, self.workers, chunk) for b in blocks)
         dev = DeviceFeed(staged, sharding=self.block_sharding(),
                          depth=self.config.feed_depth)
         ingest = self._ingest_blocks_fn
+        # process-level obs (DESIGN.md §12): counts + per-block dispatch
+        # latency (async — the cost the feed loop itself pays, not the
+        # device compute it overlaps)
+        reg = obs_metrics.DEFAULT
+        m_blocks = reg.counter("runtime.feed.blocks")
+        m_step = reg.histogram("runtime.feed.step_s")
         for block in dev:
             if block.shape[-1] == 0:    # empty host block → nothing pending
                 continue
+            t0 = _time.perf_counter()
             state = ingest(state, block)
+            m_step.record(_time.perf_counter() - t0)
+            m_blocks.inc()
             ingest = self._feed_ingest_fn
         return state
 
@@ -292,6 +303,7 @@ class StreamRuntime:
         """
         from repro.service.snapshot import publish
         summary = self._merged_fn(state)
+        obs_metrics.DEFAULT.counter("runtime.snapshot_publishes").inc()
         return publish(summary, state.n.sum(), state.n,
                        version=next(self._versions),
                        kernel=self.engine.config.resolved_kernel())

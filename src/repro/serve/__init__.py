@@ -9,6 +9,14 @@ from the newest complete version through the batching QueryFrontend.
 Publish cadence and ring depth are PlanService-resolved knobs (the
 ``"publish"`` probe op); ``python -m repro.launch.bench_serve`` measures
 the tier under mixed read/write load into ``BENCH_serve.json``.
+
+Every tier is observable by default (DESIGN.md §12): a tier-scoped
+metrics registry + tracer instrument the loop and frontend, and a
+:class:`~repro.obs.health.HealthMonitor` refreshes sketch-native health
+gauges off the ring — ``ServingTier.describe()`` or
+``python -m repro.launch.metrics`` dump the whole surface, and
+``python -m repro.launch.bench_obs`` gates the instrumentation overhead
+into ``BENCH_obs.json``.
 """
 from repro.serve.config import ADMISSION_POLICIES, ServeConfig
 from repro.serve.frontend import PointEstimates, ServeFrontend, TopTable

@@ -41,6 +41,12 @@ class ServeConfig:
     ring_depth: int | None = None      # SnapshotRing slots; None → plan
     queue_depth: int = 8               # bounded admission queue (blocks)
     admission: str = "block"           # 'block' | 'shed' on queue-full
+    metrics: bool = True               # tier-local registry + spans +
+                                       # health monitor (False → no-op
+                                       # instruments, the overhead gate's
+                                       # metrics-off arm)
+    health_k_majority: int = 64        # k' for the guarantee-split
+                                       # health gauges (DESIGN.md §12)
 
     def __post_init__(self):
         if self.publish_every is not None and self.publish_every < 1:
@@ -56,6 +62,10 @@ class ServeConfig:
         if self.admission not in ADMISSION_POLICIES:
             raise ValueError(f"admission {self.admission!r} not in "
                              f"{ADMISSION_POLICIES}")
+        if self.health_k_majority < 1:
+            raise ValueError(
+                f"health_k_majority must be >= 1, got "
+                f"{self.health_k_majority}")
 
     def resolved_publish_every(self) -> int:
         """Blocks between ring publishes (None → the plan's cadence)."""

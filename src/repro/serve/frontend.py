@@ -25,12 +25,19 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import time
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.ring import SnapshotRing
 from repro.service.frontend import FrequentItemsReport, QueryFrontend
 from repro.service.snapshot import QuerySnapshot
+
+# the obs layer's per-op read surface: one latency histogram per op name
+# (shared with launch/bench_serve.py — the bench reports p50/p99 from
+# these, not from a private sample list)
+READ_OPS = ("point", "top", "kmaj")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,9 +64,23 @@ class TopTable:
 class ServeFrontend:
     """Ring-backed query surface: latest-complete reads, zero writer cost."""
 
-    def __init__(self, ring: SnapshotRing, frontend: QueryFrontend):
+    def __init__(self, ring: SnapshotRing, frontend: QueryFrontend, *,
+                 registry=None):
         self.ring = ring
         self.frontend = frontend
+        self.registry = (obs_metrics.DEFAULT if registry is None
+                         else registry)
+        self._m_read = {op: self.registry.histogram(f"serve.read.{op}_s")
+                        for op in READ_OPS}
+        self._m_staleness = self.registry.gauge(
+            "serve.read.staleness_versions")
+
+    def _observe(self, op: str, version: int, t0: float) -> None:
+        """Record one answered read: wall latency (ring lookup + batched
+        dispatch + host materialization) and how many versions the
+        answering snapshot trails the ring's newest at answer time."""
+        self._m_read[op].record(time.perf_counter() - t0)
+        self._m_staleness.set(self.ring.latest_version - version)
 
     # -- snapshot selection --------------------------------------------------
 
@@ -81,27 +102,36 @@ class ServeFrontend:
     def estimate(self, queries, *, min_version: int = 0,
                  timeout: float | None = None) -> PointEstimates:
         """(f̂, lower, monitored) per query id from the latest snapshot."""
+        t0 = time.perf_counter()
         snap = self.snapshot(min_version=min_version, timeout=timeout)
         f_hat, lower, mon = self.frontend.estimate(snap, queries)
-        return PointEstimates(version=snap.version, n=int(snap.n),
-                              f_hat=np.asarray(f_hat),
-                              lower=np.asarray(lower),
-                              monitored=np.asarray(mon))
+        out = PointEstimates(version=snap.version, n=int(snap.n),
+                             f_hat=np.asarray(f_hat),
+                             lower=np.asarray(lower),
+                             monitored=np.asarray(mon))
+        self._observe("point", snap.version, t0)
+        return out
 
     def top_table(self, n: int = 10, *, min_version: int = 0,
                   timeout: float | None = None) -> TopTable:
         """Host-side top-n rows from the latest snapshot."""
+        t0 = time.perf_counter()
         snap = self.snapshot(min_version=min_version, timeout=timeout)
-        return TopTable(version=snap.version, n=int(snap.n),
-                        rows=self.frontend.top_table(snap, n))
+        out = TopTable(version=snap.version, n=int(snap.n),
+                       rows=self.frontend.top_table(snap, n))
+        self._observe("top", snap.version, t0)
+        return out
 
     def k_majority_report(self, k_majority: int, *, min_version: int = 0,
                           timeout: float | None = None
                           ) -> FrequentItemsReport:
         """The paper's guarantee-split report from the latest snapshot
         (already host-side and version-stamped by the QueryFrontend)."""
+        t0 = time.perf_counter()
         snap = self.snapshot(min_version=min_version, timeout=timeout)
-        return self.frontend.k_majority_report(snap, k_majority)
+        out = self.frontend.k_majority_report(snap, k_majority)
+        self._observe("kmaj", snap.version, t0)
+        return out
 
     # -- queries (async) -----------------------------------------------------
 

@@ -33,13 +33,15 @@ hook the bench harness's bitwise gate is built on.
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
+import time
 
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.feed import host_blocks
 from repro.serve.ring import RingPublisher, SnapshotRing
 from repro.service.snapshot import QuerySnapshot
@@ -47,18 +49,73 @@ from repro.service.snapshot import QuerySnapshot
 _BLOCK, _PUBLISH, _STOP = "block", "publish", "stop"
 
 
-@dataclasses.dataclass
 class IngestStats:
-    """Host-side counters of one IngestLoop (read-only for consumers)."""
+    """Host-side counters of one IngestLoop (read-only for consumers).
 
-    blocks_submitted: int = 0   # accepted into the queue
-    blocks_shed: int = 0        # rejected by 'shed' admission (queue full)
-    blocks_ingested: int = 0    # actually fed into the sketch
-    items_ingested: int = 0     # stream items across ingested blocks
-    publishes: int = 0          # snapshots published to the ring
+    Written from two threads — producers bump ``blocks_submitted`` /
+    ``blocks_shed`` inside ``submit()`` while the loop thread bumps
+    ``blocks_ingested`` / ``items_ingested`` / ``publishes`` — so every
+    mutation and every read goes through one lock: ``describe()`` is a
+    *consistent* snapshot (a reader can never observe
+    ``blocks_ingested``/``items_ingested`` torn relative to each other or
+    mid-update), and fields that must move together are updated in one
+    ``add()`` call. The earlier dataclass mutated public fields in place,
+    which let an unsynchronized reader see exactly those torn states.
+    """
+
+    FIELDS = ("blocks_submitted",   # accepted into the queue
+              "blocks_shed",        # rejected by 'shed' admission
+              "blocks_ingested",    # actually fed into the sketch
+              "items_ingested",     # stream items across ingested blocks
+              "publishes")          # snapshots published to the ring
+
+    __slots__ = ("_lock",) + tuple("_" + f for f in FIELDS)
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        for f in self.FIELDS:
+            setattr(self, "_" + f, 0)
+
+    def add(self, **deltas) -> None:
+        """Atomically apply one batch of counter deltas."""
+        with self._lock:
+            for name, d in deltas.items():
+                if name not in self.FIELDS:
+                    raise AttributeError(f"IngestStats has no counter "
+                                         f"{name!r}")
+                setattr(self, "_" + name, getattr(self, "_" + name) + d)
 
     def describe(self) -> dict:
-        return dataclasses.asdict(self)
+        """One lock-consistent snapshot of every counter."""
+        with self._lock:
+            return {f: getattr(self, "_" + f) for f in self.FIELDS}
+
+    # per-field reads share the same lock, so a single field is never
+    # observed mid-update either
+    @property
+    def blocks_submitted(self) -> int:
+        with self._lock:
+            return self._blocks_submitted
+
+    @property
+    def blocks_shed(self) -> int:
+        with self._lock:
+            return self._blocks_shed
+
+    @property
+    def blocks_ingested(self) -> int:
+        with self._lock:
+            return self._blocks_ingested
+
+    @property
+    def items_ingested(self) -> int:
+        with self._lock:
+            return self._items_ingested
+
+    @property
+    def publishes(self) -> int:
+        with self._lock:
+            return self._publishes
 
 
 class _Pending:
@@ -83,7 +140,8 @@ class IngestLoop:
 
     def __init__(self, runtime, ring: SnapshotRing, *,
                  publish_every: int, queue_depth: int = 8,
-                 admission: str = "block", state=None):
+                 admission: str = "block", state=None, registry=None,
+                 tracer=None):
         if publish_every < 1:
             raise ValueError(
                 f"publish_every must be >= 1, got {publish_every}")
@@ -95,6 +153,18 @@ class IngestLoop:
         self.publish_every = publish_every
         self.admission = admission
         self.stats = IngestStats()
+        # instruments are created once here; record() on the loop path is
+        # then O(1) with no name lookups (DESIGN.md §12 overhead budget)
+        self.registry = (obs_metrics.DEFAULT if registry is None
+                         else registry)
+        self.tracer = obs_trace.DEFAULT if tracer is None else tracer
+        reg = self.registry
+        self._m_queue_depth = reg.gauge("serve.ingest.queue_depth")
+        self._m_step = reg.histogram("serve.ingest.step_s")
+        self._m_publish = reg.histogram("serve.ingest.publish_s")
+        self._m_blocks = reg.counter("serve.ingest.blocks")
+        self._m_items = reg.counter("serve.ingest.items")
+        self._m_shed = reg.counter("serve.ingest.shed")
         self._publisher = RingPublisher(runtime, ring)
         self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._state = state if state is not None else runtime.init()
@@ -141,11 +211,13 @@ class IngestLoop:
             try:
                 self._queue.put_nowait((_BLOCK, block))
             except queue.Full:
-                self.stats.blocks_shed += 1
+                self.stats.add(blocks_shed=1)
+                self._m_shed.inc()
                 return False
         else:
             self._queue.put((_BLOCK, block), timeout=timeout)
-        self.stats.blocks_submitted += 1
+        self.stats.add(blocks_submitted=1)
+        self._m_queue_depth.set(self._queue.qsize())
         return True
 
     def publish_now(self, timeout: float | None = None) -> QuerySnapshot:
@@ -218,15 +290,24 @@ class IngestLoop:
                     donate_ok = False
                     payload.resolve(self._publish())
                     continue
-                block = host_blocks(np.asarray(payload), rt.workers, chunk)
-                if block.shape[-1]:
-                    dev = jax.device_put(block, sharding)
-                    fn = ingest_donated if donate_ok else ingest_plain
-                    self._state = fn(self._state, dev)
-                    donate_ok = True
-                    self.stats.items_ingested += int(
-                        np.asarray(payload).size)
-                self.stats.blocks_ingested += 1
+                t0 = time.perf_counter()
+                with self.tracer.span("ingest.step"):
+                    block = host_blocks(np.asarray(payload), rt.workers,
+                                        chunk)
+                    if block.shape[-1]:
+                        dev = jax.device_put(block, sharding)
+                        fn = ingest_donated if donate_ok else ingest_plain
+                        self._state = fn(self._state, dev)
+                        donate_ok = True
+                        items = int(np.asarray(payload).size)
+                        self.stats.add(blocks_ingested=1,
+                                       items_ingested=items)
+                        self._m_items.inc(items)
+                    else:
+                        self.stats.add(blocks_ingested=1)
+                self._m_blocks.inc()
+                self._m_step.record(time.perf_counter() - t0)
+                self._m_queue_depth.set(self._queue.qsize())
                 since_publish += 1
                 if since_publish >= self.publish_every:
                     since_publish = 0
@@ -247,6 +328,11 @@ class IngestLoop:
                 pass
 
     def _publish(self) -> QuerySnapshot:
-        snap = self._publisher.publish(self._state)
-        self.stats.publishes += 1
+        # timed around the async dispatch + ring swap: this is the write
+        # path's entire snapshot cost (readers pay materialization)
+        t0 = time.perf_counter()
+        with self.tracer.span("ingest.publish"):
+            snap = self._publisher.publish(self._state)
+        self._m_publish.record(time.perf_counter() - t0)
+        self.stats.add(publishes=1)
         return snap

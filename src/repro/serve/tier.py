@@ -5,6 +5,8 @@ One object composes the whole tier from a :class:`ServeConfig`:
     StreamRuntime  ──►  IngestLoop (thread)  ──►  SnapshotRing
          │                   ▲ bounded queue          │ atomic latest
          └─ QueryFrontend ◄──┴── ServeFrontend ◄──────┘
+                                       ▲
+                     HealthMonitor ────┘ (reader-side gauge refresh)
 
 ``submit()`` feeds host stream blocks through the bounded admission
 queue; the loop thread ingests them continuously and publishes a
@@ -18,9 +20,22 @@ interference. Use as a context manager for a drained, clean shutdown:
         for block in stream_blocks:
             tier.submit(block)
         report = tier.frontend.k_majority_report(100)
+
+Observability (DESIGN.md §12): unless ``config.metrics`` is off, the
+tier owns a private :class:`~repro.obs.metrics.MetricsRegistry` and
+:class:`~repro.obs.trace.Tracer` shared by its loop and frontend — so
+concurrent tiers never aggregate into each other — plus a
+:class:`~repro.obs.health.HealthMonitor` refreshing sketch-native gauges
+(min-count ε bound, occupancy, saturation, guarantee split) off the ring
+on every publish, on its own thread. ``describe()`` surfaces config,
+consistent ingest stats, the metrics dump, and the latest health;
+``python -m repro.launch.metrics`` renders the same surface as a CLI.
 """
 from __future__ import annotations
 
+from repro.obs import health as obs_health
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime import StreamRuntime
 from repro.serve.config import ServeConfig
 from repro.serve.frontend import ServeFrontend
@@ -30,10 +45,11 @@ from repro.service.snapshot import QuerySnapshot
 
 
 class ServingTier:
-    """Runtime + ingest loop + ring + frontend, wired and lifecycled."""
+    """Runtime + ingest loop + ring + frontend + obs, wired and lifecycled."""
 
     def __init__(self, config: ServeConfig = ServeConfig(), *,
-                 runtime: StreamRuntime | None = None):
+                 runtime: StreamRuntime | None = None, registry=None,
+                 tracer=None):
         # an injected runtime lets several tiers (or a tier and a batch
         # reference path) share one runtime's jitted programs — the bench
         # harness leans on this so phases compare compute, not compiles
@@ -42,15 +58,31 @@ class ServingTier:
                         else StreamRuntime(config.runtime))
         self.publish_every = config.resolved_publish_every()
         self.ring = SnapshotRing(config.resolved_ring_depth())
+        # an injected registry/tracer wins; otherwise each tier scopes its
+        # own (or the shared no-op instances when metrics are off)
+        if registry is None:
+            registry = (obs_metrics.MetricsRegistry() if config.metrics
+                        else obs_metrics.NULL)
+        if tracer is None:
+            tracer = obs_trace.Tracer() if config.metrics else obs_trace.NULL
+        self.registry = registry
+        self.tracer = tracer
         self.loop = IngestLoop(
             self.runtime, self.ring, publish_every=self.publish_every,
-            queue_depth=config.queue_depth, admission=config.admission)
-        self.frontend = ServeFrontend(self.ring, self.runtime.frontend())
+            queue_depth=config.queue_depth, admission=config.admission,
+            registry=registry, tracer=tracer)
+        self.frontend = ServeFrontend(self.ring, self.runtime.frontend(),
+                                      registry=registry)
+        self.health = (obs_health.HealthMonitor(
+            self.ring, registry, k_majority=config.health_k_majority)
+            if config.metrics else None)
 
     # -- lifecycle -----------------------------------------------------------
 
     def start(self) -> "ServingTier":
         self.loop.start()
+        if self.health is not None:
+            self.health.start()
         return self
 
     def __enter__(self) -> "ServingTier":
@@ -61,7 +93,12 @@ class ServingTier:
 
     def stop(self, *, drain: bool = True) -> QuerySnapshot | None:
         """Stop ingestion (draining queued blocks first by default)."""
-        return self.loop.stop(drain=drain)
+        snap = self.loop.stop(drain=drain)
+        # stopped AFTER the loop so the monitor's final refresh reflects
+        # the drained stream position, not an intermediate publish
+        if self.health is not None and self.health.running:
+            self.health.stop()
+        return snap
 
     # -- write path ----------------------------------------------------------
 
@@ -79,7 +116,25 @@ class ServingTier:
     def stats(self):
         return self.loop.stats
 
+    def health_report(self, *, refresh: bool = True) -> dict | None:
+        """Sketch-native health of the newest published snapshot.
+
+        With the monitor running, ``refresh=True`` recomputes from the
+        ring's latest version synchronously (blocks on its reduction —
+        the reader cost, by design); ``refresh=False`` returns whatever
+        the monitor last published. With metrics off, computes on
+        demand. ``None`` before the first publish.
+        """
+        if self.ring.latest() is None:
+            return None
+        if self.health is not None:
+            return (self.health.refresh() if refresh
+                    else self.health.latest())
+        return obs_health.sketch_health(
+            self.ring.latest(), self.config.health_k_majority)
+
     def describe(self) -> dict:
+        """Config + consistent stats + metrics dump + latest health."""
         return {
             "workers": self.runtime.workers,
             "publish_every": self.publish_every,
@@ -88,4 +143,7 @@ class ServingTier:
             "admission": self.config.admission,
             "latest_version": self.ring.latest_version,
             **self.stats.describe(),
+            "metrics": self.registry.describe(),
+            "health": (self.health.latest() if self.health is not None
+                       else None),
         }

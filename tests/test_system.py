@@ -74,4 +74,7 @@ def test_serve_driver_end_to_end():
         "repro.launch.serve", "--arch", "mamba2-130m", "--smoke",
         "--batch", "2", "--prompt-len", "32", "--gen", "8",
         "--report-every", "4"])
-    assert "[serve] generated" in out
+    # the decode loop's telemetry goes through the obs tracer now:
+    # structured "[name] key=value" lines (DESIGN.md §12)
+    assert "[serve.decode.done]" in out
+    assert "[serve.hot_tokens]" in out
