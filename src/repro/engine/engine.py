@@ -196,9 +196,24 @@ class SketchEngine:
     # -- queries ------------------------------------------------------------
 
     def _merged(self, state: SketchState) -> Summary:
-        """One global summary: flush view, then the reduction strategy."""
-        return self._reduce(self._flush_view(state),
-                            tuple(self.config.axis_names))
+        """One global summary: flush view, then the reduction strategy.
+
+        Device-resident cheap path (DESIGN.md §13): when ``fill == 0``
+        the pending window is all-EMPTY by construction (``_update``
+        auto-flushes and resets exactly when the buffer fills, and flush
+        resets to the EMPTY buffer), so the window-level merge would be
+        an identity pass over T·C EMPTY slots — the dominant cost of a
+        block-boundary snapshot. The cond skips it and pays only the
+        reduction, bitwise-identically (merging an EMPTY window never
+        changes a summary; asserted per kernel × flush mode in
+        tests/test_serve.py).
+        """
+        axes = tuple(self.config.axis_names)
+        return lax.cond(
+            state.fill == 0,
+            lambda st: self._reduce(st.summary, axes),
+            lambda st: self._reduce(self._flush_view(st), axes),
+            state)
 
     def _top(self, state: SketchState, n: int = 10):
         # n is clamped to [0, k]: slicing past k would silently return k
@@ -218,18 +233,40 @@ class SketchEngine:
     def _snapshot_impl(self, state: SketchState):
         return self._merged(state), state.n.sum(), state.n
 
-    def snapshot(self, state: SketchState):
+    def snapshot(self, state: SketchState, *, lazy: bool = False,
+                 version: int | None = None, n_hint: int | None = None,
+                 on_materialize=None):
         """Publish an immutable, versioned :class:`QuerySnapshot`.
 
         Built from the pure flush *view* + the reduction strategy, so the
         pending buffer is fully visible in the snapshot but ``state`` is
         NOT flushed or otherwise mutated — ingestion keeps appending to the
         same buffer while readers query the frozen view. Each publish from
-        this engine gets the next version number (monotonic, host-side).
+        this engine gets the next version number (monotonic, host-side;
+        ``version`` pins it for deferred republication).
+
+        ``lazy=True`` returns a :class:`LazyQuerySnapshot` instead: the
+        write path captures only the state reference + cheap scalars
+        (``n_hint`` feeds the ``count_floor`` ε filter) and the reduction
+        runs on the first reader. The caller must uphold the donation
+        fence — the state passed here must never be donated to a later
+        program (``IngestLoop`` runs one non-donated ingest after every
+        publish, which is exactly that guarantee).
         """
+        from repro.service.snapshot import publish, publish_lazy
+        if version is None:
+            version = next(self._versions)
+        self._m_snapshots.inc()
+        if lazy:
+            c = self.config
+            return publish_lazy(
+                lambda: self._eager_snapshot(state, version),
+                version=version, kernel=c.resolved_kernel(), k=c.k,
+                n_hint=n_hint, on_materialize=on_materialize)
+        return self._eager_snapshot(state, version)
+
+    def _eager_snapshot(self, state: SketchState, version: int):
         from repro.service.snapshot import publish
         summary, n_total, shard_n = self._snapshot_arrays(state)
-        self._m_snapshots.inc()
-        return publish(summary, n_total, shard_n,
-                       version=next(self._versions),
+        return publish(summary, n_total, shard_n, version=version,
                        kernel=self.config.resolved_kernel())

@@ -112,6 +112,21 @@ def run_bench(*, impl="jnp", k=2048, lanes=2, chunk=2048, depth=4,
     emit("obs_health_consistent", str(not mismatches).lower(),
          f"fields={len(HEALTH_FIELDS)}")
 
+    # async-pipeline observability (DESIGN.md §13): the metrics-on arm
+    # carries the tier's coalescing histogram and publish/health deferral
+    # counters — surfaced here so BENCH_obs.json records how the plan's
+    # pipeline knobs actually behaved under the obs workload
+    pipeline = dict(last_on.get("pipeline") or {})
+    co = pipeline.get("coalesce_blocks") or {}
+    emit("obs_pipeline_coalesce_max", pipeline.get("coalesce_max", 1),
+         f"mean_blocks_per_dispatch={co.get('mean', 1.0):.2f}"
+         if co.get("count") else "")
+    emit("obs_pipeline_publishes_deferred",
+         pipeline.get("publishes_deferred", 0),
+         f"materialized={pipeline.get('publishes_materialized', 0)}")
+    emit("obs_pipeline_health_deferred",
+         pipeline.get("health_deferred", 0), "lazy versions skipped")
+
     return {
         "config": {
             "impl": impl, "k": k, "lanes": lanes, "chunk": chunk,
@@ -133,6 +148,7 @@ def run_bench(*, impl="jnp", k=2048, lanes=2, chunk=2048, depth=4,
             "reference": reference,
             "mismatches": mismatches,
         },
+        "pipeline": pipeline,
         "metrics_on_stats": last_on["stats"],
     }
 

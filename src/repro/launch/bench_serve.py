@@ -23,15 +23,31 @@ jitted programs, so phases compare compute, not compiles):
      with the recorded ``bucket_error_bound`` instead of re-derived
      from private sample lists.
 
+A fifth, reader-free **pipeline** phase (DESIGN.md §13) runs a shortened
+stream through the legacy serving discipline (one block per dispatch, no
+staging overlap, eager publishes) and through the tuned async pipeline
+(plan-resolved ``coalesce_max`` / ``feed_depth`` / ``lazy_publish``) —
+same host, same run, same jitted programs — and records the throughput
+``gain`` per impl. ``--budget-s`` caps each phase's stream from a warmed
+per-block measurement so the whole run fits a time budget without
+touching any gate.
+
 ``--check`` gates (the CI serve-smoke leg):
 
   * ingest-with-readers within ``--min-ingest-ratio`` (default 0.9) of
     the same run's reader-free baseline — the ≤10% interference SLO;
   * per-op p50/p99 latency under ``--p50-slo``/``--p99-slo``;
   * baseline AND loaded drained snapshots bitwise-identical to the
-    synchronous reference at the same stream position;
+    synchronous reference at the same stream position; lazy publishes
+    bitwise-identical to eager ones; the pipeline arms bitwise-identical
+    to each other;
   * admission accounting closes: submitted + shed == offered, and every
-    admitted block was ingested by drain time.
+    admitted block was ingested by drain time;
+  * no perf regression: loaded updates/sec at least
+    ``--min-regression-frac`` (default 0.9) of the committed ``--out``
+    record's, compared only when the device fingerprint AND workload
+    shape match (warn-skip otherwise — numbers from other hardware or
+    another workload bound nothing).
 
 Results: ``name,value,derived`` CSV on stdout + ``BENCH_serve.json``.
 
@@ -96,18 +112,27 @@ def _reader(frontend, stop, *, queries, kmaj, period, offset):
 
 def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
               admission, readers=0, qps=0.0, queries=None, kmaj=64,
-              warm_queries=False, metrics=True):
+              warm_queries=False, metrics=True, coalesce_max=None,
+              feed_depth=None, lazy_publish=None):
     """One tier phase: submit every block, drain, return measurements.
 
     ``metrics=False`` runs the tier on no-op instruments — the
     metrics-off arm of the overhead gate (``launch/bench_obs.py`` reuses
-    this phase runner for both arms).
+    this phase runner for both arms). The pipeline knobs default to
+    ``None`` → the active plan's resolution, exactly like a production
+    tier; explicit values pin one arm of the legacy-vs-pipeline
+    comparison.
     """
-    from repro.runtime import RuntimeConfig  # noqa: F401  (doc anchor)
+    import dataclasses
+
     from repro.serve import ServeConfig, ServingTier
 
-    cfg = ServeConfig(runtime=runtime.config, publish_every=publish_every,
-                      ring_depth=ring_depth, queue_depth=queue_depth,
+    rcfg = runtime.config
+    if feed_depth is not None:
+        rcfg = dataclasses.replace(rcfg, feed_depth=feed_depth)
+    cfg = ServeConfig(runtime=rcfg, publish_every=publish_every,
+                      ring_depth=ring_depth, coalesce_max=coalesce_max,
+                      lazy_publish=lazy_publish, queue_depth=queue_depth,
                       admission=admission, metrics=metrics,
                       health_k_majority=kmaj)
     tier = ServingTier(cfg, runtime=runtime).start()
@@ -132,6 +157,9 @@ def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
         for b in blocks:
             tier.submit(b)
         snap = tier.drain()
+        # barrier: the phase ends when ingest COMPUTE is done, not when
+        # its dispatches were enqueued (lazy publishes never force one)
+        tier.loop.sync()
         elapsed = time.perf_counter() - t0
 
         stop.set()
@@ -151,23 +179,49 @@ def _run_tier(runtime, blocks, *, publish_every, ring_depth, queue_depth,
                 "bucket_error_bound": d.get("error_bound", 0.0),
             }
         health = tier.health_report() if metrics else None
+        # pipeline observability (DESIGN.md §13): actual coalesce batch
+        # sizes + how the lazy-publish deferral played out this phase
+        pipeline = {
+            "coalesce_max": tier.coalesce_max,
+            "feed_depth": tier.feed_depth,
+            "lazy_publish": tier.lazy_publish,
+        }
+        if metrics:
+            reg = tier.registry
+            pipeline.update({
+                "coalesce_blocks": reg.histogram(
+                    "serve.ingest.coalesce_blocks").describe(),
+                "publishes_deferred": reg.counter(
+                    "serve.publish.deferred").value,
+                "publishes_materialized": reg.counter(
+                    "serve.publish.materialized").value,
+                "health_deferred": reg.counter(
+                    "obs.health.deferred").value,
+                "floor_answers": reg.counter(
+                    "serve.read.floor_answers").value,
+            })
     finally:
         tier.stop(drain=False)
 
     return {"elapsed_s": elapsed, "snapshot": _snapshot_digest(snap),
-            "stats": stats, "queries": query_stats, "health": health}
+            "stats": stats, "queries": query_stats, "health": health,
+            "pipeline": pipeline}
 
 
 def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
               publish_every, ring_depth, queue_depth, admission, readers,
-              qps, kmaj, seed=0, emit=lambda *a: None) -> dict:
+              qps, kmaj, coalesce_max=1, feed_depth=2, lazy_publish=False,
+              budget_s=None, pipeline_blocks=96,
+              pipeline_coalesce_max=None, pipeline_feed_depth=None,
+              pipeline_lazy=None, seed=0,
+              emit=lambda *a: None) -> dict:
     import jax
     import numpy as np
 
     from repro.data.synthetic import zipf_stream
     from repro.engine import EngineConfig
     from repro.runtime import RuntimeConfig, StreamRuntime
-    from repro.runtime.feed import host_blocks
+    from repro.runtime.feed import coalesce_blocks, host_blocks
 
     results = {}
     for impl in impls:
@@ -178,10 +232,31 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
         block_items = rt.workers * chunk * layers
         host_stream = [zipf_stream(block_items, 1.1, seed=seed + i,
                                    max_id=10**6) for i in range(blocks)]
-        items_total = blocks * block_items
         queries = np.asarray(
             np.random.default_rng(seed).integers(0, 10**6, size=8)
             .astype(np.int32))
+
+        # 0. duration budget: cap each phase's stream so one impl's
+        # timed work fits ~budget_s, from a warmed measurement of one
+        # block's sync ingest cost (floor 32 blocks — fewer would starve
+        # the percentile/ratio gates of samples, weakening --check)
+        blocks_used = blocks
+        if budget_s:
+            st = rt.ingest(rt.init(),
+                           host_blocks(host_stream[0], rt.workers, chunk))
+            jax.block_until_ready(st.summary.counts)
+            t0 = time.perf_counter()
+            st = rt.ingest(st,
+                           host_blocks(host_stream[1], rt.workers, chunk))
+            jax.block_until_ready(st.summary.counts)
+            per_block = max(time.perf_counter() - t0, 1e-9)
+            # ~3 full-stream passes are timed (reference/baseline/loaded)
+            blocks_used = max(32, min(blocks, int(budget_s / per_block / 3)))
+            if blocks_used < blocks:
+                emit(f"serve_{impl}_budget_blocks", blocks_used,
+                     f"block_s={per_block:.3e};budget_s={budget_s}")
+        host_stream = host_stream[:blocks_used]
+        items_total = blocks_used * block_items
 
         # 1. reference: the synchronous ground truth over the SAME
         # per-block canonical decomposition the IngestLoop applies
@@ -190,16 +265,50 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
             state = rt.ingest(state, host_blocks(b, rt.workers, chunk))
         reference = _snapshot_digest(rt.snapshot(state))
 
+        # 1b. lazy ≡ eager on the reference state: same position, same
+        # reduction — the deferred publish must change WHEN the merge
+        # runs, never what it computes
+        lazy_snap = rt.snapshot(state, lazy=True,
+                                n_hint=int(np.asarray(state.n).sum()))
+        assert not lazy_snap.materialized
+        lazy_ok = _digests_equal(_snapshot_digest(lazy_snap), reference)
+        emit(f"serve_{impl}_lazy_eager_equiv", str(lazy_ok).lower(),
+             f"version={lazy_snap.version}")
+
         # 2. warmup tier: compile donated ingest + publish + query paths
         _run_tier(rt, host_stream[:2], publish_every=publish_every,
                   ring_depth=ring_depth, queue_depth=queue_depth,
                   admission=admission, queries=queries, kmaj=kmaj,
-                  warm_queries=True)
+                  warm_queries=True, coalesce_max=coalesce_max,
+                  feed_depth=feed_depth, lazy_publish=lazy_publish)
+        # the pipeline A/B's tuned arm may pin knobs independently of the
+        # serving phases (e.g. demonstrate lazy publishes without putting
+        # the loaded phase's readers behind a lazy materialization)
+        pipe_c = (coalesce_max if pipeline_coalesce_max is None
+                  else pipeline_coalesce_max)
+        pipe_f = (feed_depth if pipeline_feed_depth is None
+                  else pipeline_feed_depth)
+        pipe_l = lazy_publish if pipeline_lazy is None else pipeline_lazy
+
+        # 2b. warm every coalesced group shape the loop may dispatch
+        # (1..cap blocks, both ingest twins) — queue dynamics decide the
+        # batch sizes at runtime, and a mid-phase compile would be
+        # charged to the timed arm that first hit that shape
+        cap = max(1, min(max(coalesce_max, pipe_c), publish_every))
+        if cap > 1:
+            wstate = rt.init()
+            for m in range(1, cap + 1):
+                blk = coalesce_blocks(host_stream[:m], rt.workers, chunk)
+                wstate = rt._ingest_blocks_fn(wstate, blk)
+                wstate = rt._feed_ingest_fn(wstate, blk)
+            jax.block_until_ready(wstate.summary.counts)
 
         # 3. reader-free baseline
         base = _run_tier(rt, host_stream, publish_every=publish_every,
                          ring_depth=ring_depth, queue_depth=queue_depth,
-                         admission=admission, queries=queries, kmaj=kmaj)
+                         admission=admission, queries=queries, kmaj=kmaj,
+                         coalesce_max=coalesce_max, feed_depth=feed_depth,
+                         lazy_publish=lazy_publish)
         base_ups = items_total / base["elapsed_s"]
         base_ok = _digests_equal(base["snapshot"], reference)
         emit(f"serve_{impl}_baseline_updates_per_s", f"{base_ups:.4e}",
@@ -209,7 +318,9 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
         load = _run_tier(rt, host_stream, publish_every=publish_every,
                          ring_depth=ring_depth, queue_depth=queue_depth,
                          admission=admission, readers=readers, qps=qps,
-                         queries=queries, kmaj=kmaj)
+                         queries=queries, kmaj=kmaj,
+                         coalesce_max=coalesce_max, feed_depth=feed_depth,
+                         lazy_publish=lazy_publish)
         load_ups = items_total / load["elapsed_s"]
         load_ok = _digests_equal(load["snapshot"], reference)
         ratio = load_ups / base_ups
@@ -230,13 +341,42 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
             emit(f"serve_{impl}_{op}_p99", f"{q['p99_s']:.4e}",
                  f"n={q['count']}")
 
+        # 5. pipeline gain: the SAME shortened reader-free stream through
+        # the legacy serving discipline (one block per dispatch, no
+        # staging overlap, eager publishes — the pre-§13 loop) vs the
+        # tuned pipeline arm. Same host, same run, same jitted programs:
+        # the one honest apples-to-apples measure of what the async
+        # pipeline buys.
+        pstream = host_stream[:min(blocks_used, pipeline_blocks)]
+        pitems = len(pstream) * block_items
+        legacy = _run_tier(rt, pstream, publish_every=publish_every,
+                           ring_depth=ring_depth, queue_depth=queue_depth,
+                           admission=admission, queries=queries, kmaj=kmaj,
+                           coalesce_max=1, feed_depth=1,
+                           lazy_publish=False)
+        tuned = _run_tier(rt, pstream, publish_every=publish_every,
+                          ring_depth=ring_depth, queue_depth=queue_depth,
+                          admission=admission, queries=queries, kmaj=kmaj,
+                          coalesce_max=pipe_c, feed_depth=pipe_f,
+                          lazy_publish=pipe_l)
+        legacy_ups = pitems / legacy["elapsed_s"]
+        tuned_ups = pitems / tuned["elapsed_s"]
+        gain = tuned_ups / legacy_ups
+        pipe_ok = (_digests_equal(legacy["snapshot"], tuned["snapshot"]))
+        emit(f"serve_{impl}_pipeline_gain", f"{gain:.3f}",
+             f"legacy={legacy_ups:.3e};tuned={tuned_ups:.3e};"
+             f"coalesce={pipe_c};feed={pipe_f};lazy={pipe_l}")
+
         results[impl] = {
             "block_items": block_items,
+            "blocks_used": blocks_used,
             "items_total": items_total,
+            "lazy_eager_equivalent": lazy_ok,
             "baseline": {"elapsed_s": base["elapsed_s"],
                          "updates_per_s": base_ups,
                          "equivalent": base_ok,
-                         "stats": base["stats"]},
+                         "stats": base["stats"],
+                         "pipeline": base["pipeline"]},
             "loaded": {"elapsed_s": load["elapsed_s"],
                        "updates_per_s": load_ups,
                        "equivalent": load_ok,
@@ -244,14 +384,27 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
                        "achieved_qps": achieved_qps,
                        "queries": query_stats,
                        "stats": load["stats"],
-                       "health": load["health"]},
+                       "health": load["health"],
+                       "pipeline": load["pipeline"]},
             "ingest_ratio": ratio,
+            "pipeline": {
+                "blocks": len(pstream),
+                "legacy_updates_per_s": legacy_ups,
+                "tuned_updates_per_s": tuned_ups,
+                "gain": gain,
+                "equivalent": pipe_ok,
+                "legacy": legacy["pipeline"],
+                "tuned": tuned["pipeline"],
+            },
         }
+
+    from repro.plan import device_fingerprint
 
     ratios = [r["ingest_ratio"] for r in results.values()]
     p99s = [q["p99_s"] for r in results.values()
             for q in r["loaded"]["queries"].values()
             if math.isfinite(q["p99_s"])]
+    gains = {i: r["pipeline"]["gain"] for i, r in results.items()}
     return {
         "config": {
             "impls": list(impls), "k": k, "lanes": lanes, "chunk": chunk,
@@ -259,9 +412,13 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
             "publish_every": publish_every, "ring_depth": ring_depth,
             "queue_depth": queue_depth, "admission": admission,
             "readers": readers, "qps": qps, "k_majority": kmaj,
+            "coalesce_max": coalesce_max, "feed_depth": feed_depth,
+            "lazy_publish": lazy_publish, "budget_s": budget_s,
+            "pipeline_blocks": pipeline_blocks,
             "backend": jax.default_backend(),
             "devices": len(jax.devices()),
         },
+        "fingerprint": device_fingerprint(),
         "impls": results,
         "summary": {
             "min_ingest_ratio": min(ratios) if ratios else float("nan"),
@@ -269,6 +426,11 @@ def run_bench(*, impls, k, lanes, chunk, depth, blocks, layers,
             "all_equivalent": all(
                 r["baseline"]["equivalent"] and r["loaded"]["equivalent"]
                 for r in results.values()),
+            "all_lazy_eager_equivalent": all(
+                r["lazy_eager_equivalent"] for r in results.values()),
+            "pipeline_gains": gains,
+            "best_pipeline_gain": max(gains.values()) if gains
+            else float("nan"),
         },
     }
 
@@ -277,14 +439,21 @@ def check_record(record: dict, *, min_ratio: float, p50_slo: float,
                  p99_slo: float) -> list[str]:
     """The serve SLO gate — every violation is one line."""
     failures = []
-    blocks = record["config"]["blocks"]
     for impl, r in record["impls"].items():
+        blocks = r.get("blocks_used", record["config"]["blocks"])
         if not r["baseline"]["equivalent"]:
             failures.append(f"{impl}: baseline tier snapshot != "
                             "synchronous reference")
         if not r["loaded"]["equivalent"]:
             failures.append(f"{impl}: loaded tier snapshot != "
                             "synchronous reference")
+        if not r.get("lazy_eager_equivalent", True):
+            failures.append(f"{impl}: lazy snapshot != eager snapshot "
+                            "at the same stream position")
+        pipe = r.get("pipeline")
+        if pipe is not None and not pipe["equivalent"]:
+            failures.append(f"{impl}: pipeline-tuned tier snapshot != "
+                            "legacy-discipline tier snapshot")
         if not (r["ingest_ratio"] >= min_ratio):
             failures.append(
                 f"{impl}: ingest under readers at "
@@ -315,6 +484,62 @@ def check_record(record: dict, *, min_ratio: float, p50_slo: float,
     return failures
 
 
+def check_regression(record: dict, committed: dict | None, *,
+                     min_frac: float = 0.9,
+                     emit=lambda *a: None) -> list[str]:
+    """Perf-regression gate vs the committed BENCH_serve.json record.
+
+    Compares sustained under-reader updates/sec per impl against the
+    previously committed record FOR THE SAME DEVICE FINGERPRINT AND
+    WORKLOAD — a number measured on different hardware or a different
+    workload shape bounds nothing, so unknown/mismatched fingerprints
+    and changed workload configs warn-skip (emitted, never failed). A
+    fresh run below ``min_frac`` of the committed same-host same-shape
+    number is a regression the serve path must not silently absorb.
+    """
+    if not committed:
+        emit("serve_regression_gate", "skipped", "no committed record")
+        return []
+    old_fp = committed.get("fingerprint")
+    new_fp = record.get("fingerprint")
+    if not old_fp or old_fp != new_fp:
+        emit("serve_regression_gate", "skipped",
+             f"fingerprint mismatch (committed={old_fp or 'none'})")
+        return []
+    # updates/sec only compares across identical workload shapes —
+    # blocks is left out deliberately (rates amortize stream length, and
+    # --budget-s caps it per host without invalidating the gate)
+    shape_keys = ("k", "lanes", "chunk", "buffer_depth", "layers",
+                  "publish_every", "ring_depth", "queue_depth",
+                  "admission", "readers", "qps", "k_majority")
+    old_cfg = committed.get("config", {})
+    new_cfg = record.get("config", {})
+    drift = [key for key in shape_keys
+             if old_cfg.get(key) != new_cfg.get(key)]
+    if drift:
+        emit("serve_regression_gate", "skipped",
+             f"workload config drift ({','.join(drift)})")
+        return []
+    failures = []
+    for impl, r in record["impls"].items():
+        old = committed.get("impls", {}).get(impl)
+        if not old:
+            emit(f"serve_{impl}_regression", "skipped",
+                 "impl not in committed record")
+            continue
+        old_ups = old["loaded"]["updates_per_s"]
+        new_ups = r["loaded"]["updates_per_s"]
+        frac = new_ups / old_ups if old_ups else float("inf")
+        emit(f"serve_{impl}_regression", f"{frac:.3f}",
+             f"committed={old_ups:.3e};fresh={new_ups:.3e}")
+        if frac < min_frac:
+            failures.append(
+                f"{impl}: loaded updates/sec regressed to {frac:.3f}× of "
+                f"the committed same-fingerprint record "
+                f"({new_ups:.3e} vs {old_ups:.3e}; floor {min_frac}×)")
+    return failures
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     ap = argparse.ArgumentParser()
@@ -334,6 +559,34 @@ def main(argv=None) -> int:
                     help="blocks per ring publish (default: active plan)")
     ap.add_argument("--ring-depth", type=int, default=None,
                     help="snapshot ring depth (default: active plan)")
+    ap.add_argument("--coalesce-max", type=int, default=None,
+                    help="max queued blocks per coalesced ingest dispatch "
+                         "(default: active plan)")
+    ap.add_argument("--feed-depth", type=int, default=None,
+                    help="host→device staging depth (default: active plan)")
+    ap.add_argument("--lazy-publish", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="defer snapshot reductions to the first reader "
+                         "(auto: active plan)")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="approximate per-impl timed-phase budget in "
+                         "seconds; caps --blocks from a warmed per-block "
+                         "measurement (floor 32 blocks, gates unchanged)")
+    ap.add_argument("--pipeline-blocks", type=int, default=96,
+                    help="stream length of the legacy-vs-pipeline gain "
+                         "arms (reader-free, same-run)")
+    ap.add_argument("--pipeline-coalesce-max", type=int, default=None,
+                    help="coalesce_max of the pipeline A/B's tuned arm "
+                         "only (default: the serving phases' value)")
+    ap.add_argument("--pipeline-feed-depth", type=int, default=None,
+                    help="feed_depth of the pipeline A/B's tuned arm "
+                         "only (default: the serving phases' value)")
+    ap.add_argument("--pipeline-lazy-publish", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="lazy_publish of the pipeline A/B's tuned arm "
+                         "only; the arm is reader-free, so lazy here "
+                         "never costs the loaded phase's read SLOs "
+                         "(auto: the serving phases' value)")
     ap.add_argument("--queue-depth", type=int, default=8)
     ap.add_argument("--admission", default="block",
                     choices=("block", "shed"))
@@ -347,6 +600,10 @@ def main(argv=None) -> int:
     ap.add_argument("--min-ingest-ratio", type=float, default=0.9,
                     help="--check: loaded/baseline updates_per_s floor "
                          "(the <=10%% interference SLO)")
+    ap.add_argument("--min-regression-frac", type=float, default=0.9,
+                    help="--check: fresh loaded updates_per_s must be at "
+                         "least this fraction of the committed --out "
+                         "record's (same fingerprint only; else skipped)")
     ap.add_argument("--p50-slo", type=float, default=0.5,
                     help="--check: per-op p50 latency ceiling (s)")
     ap.add_argument("--p99-slo", type=float, default=5.0,
@@ -363,17 +620,24 @@ def main(argv=None) -> int:
         # sized so the timed phases span ~1-2s on a small CI runner:
         # long enough for stable percentiles and an ingest-ratio gate
         # that measures steady state, short enough for a smoke leg
+        # (pipelined dispatch roughly doubled per-block throughput, so
+        # 120 blocks buy the steady state 240 used to)
         args.k, args.chunk, args.depth = 256, 512, 2
-        args.blocks, args.layers = 240, 8
+        args.blocks, args.layers = 120, 8
         args.readers = min(args.readers, 2)
         args.qps = min(args.qps, 25.0)
+        args.pipeline_blocks = min(args.pipeline_blocks, 48)
 
     # the plan-resolved defaults are materialized HERE (not inside the
-    # tier) so the record shows the cadence the run actually used
+    # tier) so the record shows the cadence/pipeline the run actually used
     from repro.plan import active_plan
     plan = active_plan()
     publish_every = args.publish_every or plan.publish_every
     ring_depth = args.ring_depth or plan.ring_depth
+    coalesce_max = args.coalesce_max or plan.coalesce_max
+    feed_depth = args.feed_depth or plan.feed_depth
+    lazy_publish = (plan.lazy_publish if args.lazy_publish == "auto"
+                    else args.lazy_publish == "on")
 
     print("name,value,derived")
 
@@ -382,6 +646,20 @@ def main(argv=None) -> int:
 
     emit("serve_publish_every", publish_every, f"plan={plan.source}")
     emit("serve_ring_depth", ring_depth, f"plan={plan.source}")
+    emit("serve_coalesce_max", coalesce_max, f"plan={plan.source}")
+    emit("serve_feed_depth", feed_depth, f"plan={plan.source}")
+    emit("serve_lazy_publish", str(lazy_publish).lower(),
+         f"plan={plan.source}")
+
+    # the committed record is read BEFORE run_bench overwrites args.out —
+    # it is the regression gate's baseline
+    committed = None
+    out_path = Path(args.out)
+    if out_path.exists():
+        try:
+            committed = json.loads(out_path.read_text())
+        except (OSError, json.JSONDecodeError):
+            committed = None
 
     record = run_bench(
         impls=[i.strip() for i in args.kernels.split(",")],
@@ -390,7 +668,18 @@ def main(argv=None) -> int:
         publish_every=publish_every, ring_depth=ring_depth,
         queue_depth=args.queue_depth, admission=args.admission,
         readers=args.readers, qps=args.qps, kmaj=args.k_majority,
+        coalesce_max=coalesce_max, feed_depth=feed_depth,
+        lazy_publish=lazy_publish, budget_s=args.budget_s,
+        pipeline_blocks=args.pipeline_blocks,
+        pipeline_coalesce_max=args.pipeline_coalesce_max,
+        pipeline_feed_depth=args.pipeline_feed_depth,
+        pipeline_lazy=(None if args.pipeline_lazy_publish == "auto"
+                       else args.pipeline_lazy_publish == "on"),
         seed=args.seed, emit=emit)
+
+    regressions = check_regression(record, committed,
+                                   min_frac=args.min_regression_frac,
+                                   emit=emit)
 
     Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
     emit("serve_json", args.out, "written")
@@ -398,15 +687,20 @@ def main(argv=None) -> int:
     emit("min_ingest_ratio", f"{s['min_ingest_ratio']:.3f}")
     emit("worst_p99_s", f"{s['worst_p99_s']:.4e}")
     emit("all_equivalent", str(s["all_equivalent"]).lower())
+    emit("all_lazy_eager_equivalent",
+         str(s["all_lazy_eager_equivalent"]).lower())
+    emit("best_pipeline_gain", f"{s['best_pipeline_gain']:.3f}")
 
     if args.check:
         failures = check_record(record, min_ratio=args.min_ingest_ratio,
                                 p50_slo=args.p50_slo, p99_slo=args.p99_slo)
+        failures += regressions
         if failures:
             for f in failures:
                 print(f"CHECK FAILED: {f}", file=sys.stderr)
             return 1
-        print("check,ok,SLO + bitwise + accounting gates hold", flush=True)
+        print("check,ok,SLO + bitwise + accounting + regression gates "
+              "hold", flush=True)
     return 0
 
 

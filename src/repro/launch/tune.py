@@ -52,8 +52,10 @@ OPS = ("combine", "query", "flush")
 # 'publish' is NOT a kernel-table op: the probe times the serving tier's
 # write-path pair (one ingest step vs one snapshot publish) and the plan
 # records a CADENCE (publish_every / ring_depth), not an impl choice — so
-# it is handled outside the kernel sweep/gate machinery below.
-DEFAULT_OPS = OPS + ("publish",)
+# it is handled outside the kernel sweep/gate machinery below. 'pipeline'
+# likewise: it measures the async-ingestion knobs (coalesce_max /
+# feed_depth / lazy_publish, DESIGN.md §13) on the serving hot loop.
+DEFAULT_OPS = OPS + ("publish", "pipeline")
 STRATEGIES = ("butterfly", "allgather", "hierarchical")
 
 #: snapshot publishes may cost at most this fraction of ingest
@@ -84,6 +86,46 @@ def _choose_publish(rows, budget: float = PUBLISH_BUDGET) -> tuple[int, int]:
     publish_every = max(1, min(256, math.ceil(ratio / budget)))
     ring_depth = max(2, min(16, 2 + math.ceil(ratio / publish_every)))
     return publish_every, ring_depth
+
+
+#: a pipeline knob value within this fraction of the best probed cell is
+#: "as good": the SMALLEST such value wins (less queueing delay / memory)
+PIPELINE_SLACK = 0.02
+
+#: lazy publishing pays off once an eager publish costs more than this
+#: fraction of one ingest step (below that the deferral bookkeeping is
+#: all the laziness buys)
+LAZY_PUBLISH_MIN_RATIO = 0.05
+
+
+def _choose_pipeline(rows) -> tuple[int, int, bool]:
+    """(coalesce_max, feed_depth, lazy_publish) from the pipeline probes.
+
+    Coalescing and staging depth both trade latency/memory for amortized
+    dispatch overhead, so each knob takes the SMALLEST probed value whose
+    per-block cost is within ``PIPELINE_SLACK`` of the best cell — past
+    the flattening point, more coalescing only adds queueing delay.
+    ``lazy_publish`` turns on when the measured eager publish is a
+    non-trivial fraction of one ingest step (the deferral then removes
+    real write-path work for every never-read version).
+    """
+    coalesce_max, feed_depth, lazy = 1, 2, False
+    co = {r["m"]: r["block_s"] for r in rows if r.get("knob") == "coalesce"}
+    if co:
+        best = min(co.values())
+        coalesce_max = min(m for m, t in co.items()
+                           if t <= (1.0 + PIPELINE_SLACK) * best)
+    fe = {r["depth"]: r["block_s"] for r in rows if r.get("knob") == "feed"}
+    if fe:
+        best = min(fe.values())
+        feed_depth = min(d for d, t in fe.items()
+                         if t <= (1.0 + PIPELINE_SLACK) * best)
+    pub = [r for r in rows if r.get("knob") == "publish"]
+    if pub:
+        r = pub[-1]
+        lazy = r["eager_s"] > LAZY_PUBLISH_MIN_RATIO * max(r["step_s"],
+                                                           1e-12)
+    return int(coalesce_max), int(feed_depth), bool(lazy)
 
 
 def _impls_for_op(op: str, impls) -> list[str]:
@@ -338,9 +380,10 @@ def main(argv=None) -> int:
 
     ops = [o.strip() for o in args.ops.split(",")]
     # the kernel-table machinery (sweep, cost model, tolerance + bitwise
-    # gates) only understands impl-choice ops; 'publish' is a cadence
-    # probe handled in its own section below
-    kernel_ops = [o for o in ops if o != "publish"]
+    # gates) only understands impl-choice ops; 'publish' (cadence) and
+    # 'pipeline' (async-ingestion knobs) are handled in their own
+    # sections below
+    kernel_ops = [o for o in ops if o not in ("publish", "pipeline")]
     impls = [i.strip() for i in args.kernels.split(",")]
     ks = sorted({int(k) for k in args.k.split(",")})
     cs = sorted({int(c) for c in args.chunks.split(",")})
@@ -356,8 +399,8 @@ def main(argv=None) -> int:
 
     from repro.plan import CostModel, ExecutionPlan, device_fingerprint, \
         plan_path, static_impl
-    from repro.plan.probe import probe_kernels, probe_publish, \
-        probe_reductions, timeit
+    from repro.plan.probe import probe_kernels, probe_pipeline, \
+        probe_publish, probe_reductions, timeit
 
     print("name,value,derived")
 
@@ -441,12 +484,31 @@ def main(argv=None) -> int:
             impl=impl_pub, repeat=args.repeat, seed=args.seed, emit=emit)
         publish_every, ring_depth = _choose_publish(publish_rows)
 
+    # -- pipeline probes (async-ingestion knobs) -----------------------------
+    # coalesce width / staging depth / lazy-vs-eager publish on the same
+    # single-shard serving hot loop, folded into the plan's pipeline knobs
+    pipeline_rows = []
+    coalesce_max, feed_depth, lazy_publish = 1, 2, False
+    if "pipeline" in ops:
+        impl_pipe = kernels.get("combine", {}).get(
+            max(ks), static_impl("combine", max(ks)))
+        pipeline_rows = probe_pipeline(
+            k=max(ks), lanes=args.lanes, chunk=chunk,
+            depth=min(args.depth, 4), impl=impl_pipe,
+            coalesce=(1, 2, 4) if q else (1, 2, 4, 8),
+            feed_depths=(1, 2) if q else (1, 2, 4),
+            repeat=args.repeat, seed=args.seed, emit=emit)
+        coalesce_max, feed_depth, lazy_publish = \
+            _choose_pipeline(pipeline_rows)
+
     # -- materialize ---------------------------------------------------------
     plan = ExecutionPlan(
         fingerprint=fp, source="measured", kernels=kernels,
         reductions=reductions, pods=pods, chunk=chunk,
         buffer_depth=args.depth, query_min_batch=min_batch,
-        publish_every=publish_every, ring_depth=ring_depth)
+        publish_every=publish_every, ring_depth=ring_depth,
+        coalesce_max=coalesce_max, feed_depth=feed_depth,
+        lazy_publish=lazy_publish)
     for op in kernel_ops:
         emit(f"plan_{op}", " ".join(f"k{k}:{v}"
                                     for k, v in sorted(kernels[op].items())))
@@ -455,6 +517,11 @@ def main(argv=None) -> int:
     emit("plan_publish_every", publish_every,
          f"budget={PUBLISH_BUDGET:.0%}")
     emit("plan_ring_depth", ring_depth)
+    emit("plan_coalesce_max", coalesce_max,
+         f"slack={PIPELINE_SLACK:.0%}")
+    emit("plan_feed_depth", feed_depth)
+    emit("plan_lazy_publish", str(lazy_publish).lower(),
+         f"min_ratio={LAZY_PUBLISH_MIN_RATIO:.0%}")
     for p, s in sorted(reductions.items()):
         emit(f"plan_reduction_p{p}", s, f"pods={pods.get(p, 1)}")
 
@@ -540,6 +607,7 @@ def main(argv=None) -> int:
         "min_batch_probes": mb_rows,
         "reduction_probes": reduce_rows,
         "publish_probes": publish_rows,
+        "pipeline_probes": pipeline_rows,
         "validation": validation,
         "model_max_rel_err": max_err,
         "plan": plan.to_json(),

@@ -23,7 +23,13 @@ Refresh discipline (the QPOPSS split, same as every read in the tier):
 materializing a snapshot's arrays blocks on its async reduction, so
 :class:`HealthMonitor` does it on its own daemon thread, woken by ring
 publishes and coalescing to the newest version when it falls behind — the
-ingest loop never waits on a health refresh.
+ingest loop never waits on a health refresh. Lazy (incremental) publishes
+take the split one step further: the monitor's background loop DEFERS on
+versions nobody has materialized yet (counted in ``obs.health.deferred``)
+instead of forcing their reduction itself — health then reflects the
+versions readers actually touched, and an unread stream costs no
+background reductions. Explicit ``refresh()`` calls still force the
+newest version (the drain/report path needs the true final position).
 """
 from __future__ import annotations
 
@@ -171,6 +177,7 @@ class HealthMonitor:
         return self.gauges.latest()
 
     def _run(self):
+        m_deferred = self.gauges.registry.counter("obs.health.deferred")
         seen = 0
         while not self._stop.is_set():
             try:
@@ -178,6 +185,14 @@ class HealthMonitor:
             except TimeoutError:
                 continue
             snap = self.ring.latest()       # coalesce to the newest
+            if getattr(snap, "materialized", True) is False:
+                # lazy publish nobody has read: don't be the reader that
+                # forces its reduction — skip, count, and treat the
+                # version as seen (a later reader-forced materialization
+                # is surfaced by refresh()/stop()'s final refresh)
+                m_deferred.inc()
+                seen = snap.version
+                continue
             try:
                 h = self.gauges.update(snap)
             except Exception:               # a torn-down ring at shutdown

@@ -29,7 +29,9 @@ class RuntimeConfig:
                                 # None → the active plan's split for p shards
     reduction: str | None = None   # cross-shard strategy; None → engine's,
                                    # 'auto' → the active plan's choice for p
-    feed_depth: int = 2         # host→device staging slots (double-buffered)
+    feed_depth: int | None = None  # host→device staging slots; None → the
+                                   # active plan's probed depth (static
+                                   # fallback 2 — double-buffered)
 
     def __post_init__(self):
         if self.shards is not None and self.shards < 1:
@@ -40,9 +42,9 @@ class RuntimeConfig:
                 and self.pods > 1 and self.shards % self.pods):
             raise ValueError(
                 f"pods ({self.pods}) must divide shards ({self.shards})")
-        if self.feed_depth < 1:
+        if self.feed_depth is not None and self.feed_depth < 1:
             raise ValueError(
-                f"feed_depth must be >= 1, got {self.feed_depth}")
+                f"feed_depth must be >= 1 or None, got {self.feed_depth}")
         if self.reduction is not None and self.reduction != "auto":
             from repro.engine.reductions import reduction_names
             if self.reduction not in reduction_names():
@@ -77,3 +79,10 @@ class RuntimeConfig:
             return self.pods
         from repro.plan import active_plan
         return active_plan().pods_for(shards)
+
+    def resolved_feed_depth(self) -> int:
+        """Staging slots in the host→device feed (None → plan-probed)."""
+        if self.feed_depth is not None:
+            return self.feed_depth
+        from repro.plan import active_plan
+        return active_plan().feed_depth

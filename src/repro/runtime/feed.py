@@ -83,6 +83,64 @@ def host_block_iter(chunks: Iterable, workers: int, multiple: int = 1, *,
         yield host_blocks(np.concatenate(buf), workers, multiple)
 
 
+def coalesce_blocks(payloads, workers: int, multiple: int = 1) -> np.ndarray:
+    """One (workers, Σper) canonical block from several host payloads.
+
+    Each payload is decomposed by :func:`host_blocks` independently (its
+    EMPTY padding lands at ITS chunk boundary, exactly where a per-block
+    ingest would put it) and the decompositions are concatenated along
+    the stream axis. Because the engine's ingest scans chunks in order,
+    ingesting the coalesced block in ONE jitted dispatch is bitwise
+    identical to ingesting the payloads one dispatch at a time — the
+    coalescing amortizes Python/dispatch overhead and changes nothing
+    about what is computed (tested per kernel impl × coalesce width in
+    tests/test_serve.py).
+    """
+    parts = [host_blocks(p, workers, multiple) for p in payloads]
+    if len(parts) == 1:
+        return parts[0]
+    return np.concatenate(parts, axis=-1)
+
+
+class DeviceStager:
+    """Push-mode staging: issue async transfers now, consume them later.
+
+    The primitive under both :class:`DeviceFeed` (pull iteration) and the
+    serving tier's :class:`~repro.serve.IngestLoop` (push pipelining):
+    ``stage()`` dispatches ``jax.device_put`` immediately — the transfer
+    of block i+1 is in flight before the compute on block i is consumed —
+    and ``take()`` hands back the oldest staged device array in FIFO
+    order. ``depth`` bounds how many transfers may be in flight (``room``
+    is the caller's staging budget). An optional ``meta`` tag rides along
+    untouched (the ingest loop uses it for block/item counts).
+    """
+
+    def __init__(self, *, sharding=None, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._sharding = sharding
+        self._queue: collections.deque = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def room(self) -> int:
+        """How many more transfers may be staged right now."""
+        return max(0, self.depth - len(self._queue))
+
+    def stage(self, block: np.ndarray, meta=None) -> jax.Array:
+        """Dispatch (async) the host→device transfer of one block."""
+        dev = jax.device_put(block, self._sharding)
+        self._queue.append((dev, meta))
+        return dev
+
+    def take(self):
+        """The oldest staged (device_array, meta) pair (FIFO)."""
+        return self._queue.popleft()
+
+
 class DeviceFeed:
     """Iterate host blocks as device arrays, ``depth`` transfers in flight."""
 
@@ -94,10 +152,10 @@ class DeviceFeed:
         self._depth = depth
 
     def __iter__(self) -> Iterator[jax.Array]:
-        queue: collections.deque = collections.deque()
+        stager = DeviceStager(sharding=self._sharding, depth=self._depth)
         for block in self._blocks:
-            queue.append(jax.device_put(block, self._sharding))
-            if len(queue) >= self._depth:
-                yield queue.popleft()
-        while queue:
-            yield queue.popleft()
+            stager.stage(block)
+            if not stager.room:
+                yield stager.take()[0]
+        while len(stager):
+            yield stager.take()[0]

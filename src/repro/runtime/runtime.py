@@ -268,7 +268,7 @@ class StreamRuntime:
         chunk = self.config.engine.chunk
         staged = (host_blocks(b, self.workers, chunk) for b in blocks)
         dev = DeviceFeed(staged, sharding=self.block_sharding(),
-                         depth=self.config.feed_depth)
+                         depth=self.config.resolved_feed_depth())
         ingest = self._ingest_blocks_fn
         # process-level obs (DESIGN.md §12): counts + per-block dispatch
         # latency (async — the cost the feed loop itself pays, not the
@@ -292,7 +292,9 @@ class StreamRuntime:
         """One global summary: flush view → lane reduce → mesh reduction."""
         return self._merged_fn(state)
 
-    def snapshot(self, state: SketchState):
+    def snapshot(self, state: SketchState, *, lazy: bool = False,
+                 version: int | None = None, n_hint: int | None = None,
+                 on_materialize=None):
         """Publish an immutable versioned QuerySnapshot (QueryService handoff).
 
         Provenance carries the per-WORKER ingest counts ((W,) — the paper's
@@ -300,12 +302,28 @@ class StreamRuntime:
         and the engine-resolved kernel. Like ``SketchEngine.snapshot``, the
         ingest buffer is only *viewed*, never flushed — ``state`` keeps
         appending afterwards.
+
+        ``lazy=True`` defers the mesh reduction to the first reader (see
+        ``SketchEngine.snapshot``); the caller owes the donation fence —
+        ``state`` must never later be donated (``feed()`` donates its
+        loop-internal states, so a published caller-held state is safe).
         """
+        from repro.service.snapshot import publish, publish_lazy
+        if version is None:
+            version = next(self._versions)
+        obs_metrics.DEFAULT.counter("runtime.snapshot_publishes").inc()
+        if lazy:
+            c = self.engine.config
+            return publish_lazy(
+                lambda: self._eager_snapshot(state, version),
+                version=version, kernel=c.resolved_kernel(), k=c.k,
+                n_hint=n_hint, on_materialize=on_materialize)
+        return self._eager_snapshot(state, version)
+
+    def _eager_snapshot(self, state: SketchState, version: int):
         from repro.service.snapshot import publish
         summary = self._merged_fn(state)
-        obs_metrics.DEFAULT.counter("runtime.snapshot_publishes").inc()
-        return publish(summary, state.n.sum(), state.n,
-                       version=next(self._versions),
+        return publish(summary, state.n.sum(), state.n, version=version,
                        kernel=self.engine.config.resolved_kernel())
 
     def frontend(self):

@@ -39,6 +39,12 @@ class ServeConfig:
     publish_every: int | None = None   # ingested blocks per ring publish;
                                        # None → the active plan's cadence
     ring_depth: int | None = None      # SnapshotRing slots; None → plan
+    coalesce_max: int | None = None    # max queued blocks ingested as ONE
+                                       # coalesced dispatch; None → plan
+                                       # (static fallback 1 — per-block)
+    lazy_publish: bool | None = None   # defer the snapshot reduction to
+                                       # the first reader; None → plan
+                                       # (static fallback False — eager)
     queue_depth: int = 8               # bounded admission queue (blocks)
     admission: str = "block"           # 'block' | 'shed' on queue-full
     metrics: bool = True               # tier-local registry + spans +
@@ -56,6 +62,10 @@ class ServeConfig:
         if self.ring_depth is not None and self.ring_depth < 1:
             raise ValueError(
                 f"ring_depth must be >= 1 or None, got {self.ring_depth}")
+        if self.coalesce_max is not None and self.coalesce_max < 1:
+            raise ValueError(
+                f"coalesce_max must be >= 1 or None, got "
+                f"{self.coalesce_max}")
         if self.queue_depth < 1:
             raise ValueError(
                 f"queue_depth must be >= 1, got {self.queue_depth}")
@@ -80,3 +90,17 @@ class ServeConfig:
             return self.ring_depth
         from repro.plan import active_plan
         return active_plan().ring_depth
+
+    def resolved_coalesce_max(self) -> int:
+        """Max blocks per coalesced ingest dispatch (None → plan)."""
+        if self.coalesce_max is not None:
+            return self.coalesce_max
+        from repro.plan import active_plan
+        return active_plan().coalesce_max
+
+    def resolved_lazy_publish(self) -> bool:
+        """Whether ring publishes defer their reduction (None → plan)."""
+        if self.lazy_publish is not None:
+            return self.lazy_publish
+        from repro.plan import active_plan
+        return active_plan().lazy_publish

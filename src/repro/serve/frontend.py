@@ -74,6 +74,7 @@ class ServeFrontend:
                         for op in READ_OPS}
         self._m_staleness = self.registry.gauge(
             "serve.read.staleness_versions")
+        self._m_floor = self.registry.counter("serve.read.floor_answers")
 
     def _observe(self, op: str, version: int, t0: float) -> None:
         """Record one answered read: wall latency (ring lookup + batched
@@ -99,11 +100,41 @@ class ServeFrontend:
 
     # -- queries (sync, thread-safe) -----------------------------------------
 
-    def estimate(self, queries, *, min_version: int = 0,
+    def estimate(self, queries, *, resolution: int | None = None,
+                 min_version: int = 0,
                  timeout: float | None = None) -> PointEstimates:
-        """(f̂, lower, monitored) per query id from the latest snapshot."""
+        """(f̂, lower, monitored) per query id from the latest snapshot.
+
+        ``resolution`` opts into the QPOPSS min-count filter (DESIGN.md
+        §13): the caller declares it only needs counts distinguished at
+        that granularity. When ``resolution <= count_floor`` — the
+        publish-time ⌊n/k⌋ scalar, an upper bound on the sketch's own ε
+        error — the summary cannot resolve anything finer, so the answer
+        is the conservative unmonitored interval (f̂ = count_floor,
+        lower = 0, monitored = False) WITHOUT touching the summary: on a
+        lazy snapshot this path never forces the deferred reduction.
+        For an unmonitored id this is the exact answer with min_count
+        loosened to its a-priori bound; a caller that needs monitored
+        heavy hitters resolved must not pass ``resolution`` (or pass one
+        above the floor).
+        """
         t0 = time.perf_counter()
         snap = self.snapshot(min_version=min_version, timeout=timeout)
+        if resolution is not None and resolution <= snap.count_floor:
+            q = np.atleast_1d(np.asarray(queries))
+            floor = int(snap.count_floor)
+            n_hint = getattr(snap, "n_hint", None)
+            n = (n_hint
+                 if not getattr(snap, "materialized", True)
+                 and n_hint is not None else int(snap.n))
+            out = PointEstimates(
+                version=snap.version, n=int(n),
+                f_hat=np.full(q.shape, floor, dtype=np.int64),
+                lower=np.zeros(q.shape, dtype=np.int64),
+                monitored=np.zeros(q.shape, dtype=bool))
+            self._m_floor.inc()
+            self._observe("point", snap.version, t0)
+            return out
         f_hat, lower, mon = self.frontend.estimate(snap, queries)
         out = PointEstimates(version=snap.version, n=int(snap.n),
                              f_hat=np.asarray(f_hat),
@@ -135,11 +166,12 @@ class ServeFrontend:
 
     # -- queries (async) -----------------------------------------------------
 
-    async def aestimate(self, queries, *, min_version: int = 0,
+    async def aestimate(self, queries, *, resolution: int | None = None,
+                        min_version: int = 0,
                         timeout: float | None = None) -> PointEstimates:
         return await asyncio.to_thread(
-            self.estimate, queries, min_version=min_version,
-            timeout=timeout)
+            self.estimate, queries, resolution=resolution,
+            min_version=min_version, timeout=timeout)
 
     async def atop_table(self, n: int = 10, *, min_version: int = 0,
                          timeout: float | None = None) -> TopTable:

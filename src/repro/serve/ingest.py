@@ -8,28 +8,50 @@ admission queue of host stream blocks. Each block takes the exact path
 served sketch is bitwise-identical to a batch-fed one over the same
 blocks (tested in tests/test_serve.py across every kernel impl).
 
-Throughput discipline, in order of importance:
+Throughput discipline, in order of importance (DESIGN.md §11, §13):
 
   * **ingestion never waits for readers.** Snapshots are published by
     dispatching the reduction *asynchronously* and swapping the ring
-    pointer immediately; readers materialize their own answers.
-  * **the dispatch pipeline stays full.** After the first block the loop
+    pointer immediately — or, with ``lazy_publish``, not dispatching it
+    at all until a reader asks; readers materialize their own answers.
+  * **wakeups drain, dispatches coalesce.** Each wakeup drains every
+    consecutively queued block (up to a control item), groups them into
+    at most ``coalesce_max``-block batches, and ingests each batch as
+    ONE jitted dispatch over the concatenated canonical decomposition —
+    bitwise-identical to per-block ingestion (the engine scans chunks in
+    order; ``coalesce_blocks``) while paying the Python/dispatch
+    overhead once per batch. Groups never straddle a publish boundary,
+    so the publish cadence (positions AND count) is exactly the
+    per-block loop's.
+  * **transfers run ahead of compute.** Batches are staged through a
+    :class:`~repro.runtime.feed.DeviceStager` ``feed_depth`` deep: the
+    ``device_put`` of batch i+1 is issued before the ingest of batch i
+    is dispatched, so host→device copies overlap compute — the
+    ``feed()`` double-buffering, carried into the serving loop.
+  * **the dispatch pipeline stays full.** After the first batch the loop
     threads its state through the runtime's DONATED ingest program (the
     ``feed()`` discipline — buffers aliased in place, no per-step state
     copy), and nothing on the loop path blocks on device results.
   * **publishes fence donation, not dispatch.** The one ingest that
     follows a publish runs through the NON-donating program: the
-    just-published snapshot's reduction still holds the state's buffers,
-    and donating them to the next ingest would hand XLA an aliasing
-    hazard. One extra state copy per publish interval is the entire cost
-    of a snapshot on the write path — which is exactly what the
-    PlanService's ``"publish"`` probe measures when it sizes the cadence.
+    just-published snapshot's reduction (eager) or captured state
+    reference (lazy) still holds the state's buffers, and donating them
+    to the next ingest would hand XLA an aliasing hazard. One extra
+    state copy per publish interval is the entire cost of a snapshot on
+    the write path — which is exactly what the PlanService's
+    ``"publish"`` probe measures when it sizes the cadence. The same
+    fence is what makes lazy snapshots valid *forever*: the captured
+    state is never donated, so a reader may materialize a version long
+    after the ring evicted it.
 
 Admission control is the queue bound: ``submit`` blocks (backpressure) or
 sheds (counted, reported in :class:`IngestStats`) per the configured
 policy. ``drain()`` waits until everything submitted so far is ingested
 and publishes a final snapshot at exactly that stream position — the
-hook the bench harness's bitwise gate is built on.
+hook the bench harness's bitwise gate is built on. (Queue order is
+preserved under coalescing: a drain stops at the first control item, so
+a ``publish_now`` resolves after every block submitted before it and
+before any block submitted after.)
 """
 from __future__ import annotations
 
@@ -37,12 +59,11 @@ import queue
 import threading
 import time
 
-import jax
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.runtime.feed import host_blocks
+from repro.runtime.feed import DeviceStager, coalesce_blocks
 from repro.serve.ring import RingPublisher, SnapshotRing
 from repro.service.snapshot import QuerySnapshot
 
@@ -140,18 +161,27 @@ class IngestLoop:
 
     def __init__(self, runtime, ring: SnapshotRing, *,
                  publish_every: int, queue_depth: int = 8,
-                 admission: str = "block", state=None, registry=None,
-                 tracer=None):
+                 admission: str = "block", coalesce_max: int = 1,
+                 feed_depth: int = 2, lazy_publish: bool = False,
+                 state=None, registry=None, tracer=None):
         if publish_every < 1:
             raise ValueError(
                 f"publish_every must be >= 1, got {publish_every}")
         if admission not in ("block", "shed"):
             raise ValueError(f"admission {admission!r} not in "
                              f"('block', 'shed')")
+        if coalesce_max < 1:
+            raise ValueError(
+                f"coalesce_max must be >= 1, got {coalesce_max}")
+        if feed_depth < 1:
+            raise ValueError(f"feed_depth must be >= 1, got {feed_depth}")
         self.runtime = runtime
         self.ring = ring
         self.publish_every = publish_every
         self.admission = admission
+        self.coalesce_max = coalesce_max
+        self.feed_depth = feed_depth
+        self.lazy_publish = lazy_publish
         self.stats = IngestStats()
         # instruments are created once here; record() on the loop path is
         # then O(1) with no name lookups (DESIGN.md §12 overhead budget)
@@ -165,6 +195,11 @@ class IngestLoop:
         self._m_blocks = reg.counter("serve.ingest.blocks")
         self._m_items = reg.counter("serve.ingest.items")
         self._m_shed = reg.counter("serve.ingest.shed")
+        # pipeline observability (DESIGN.md §13): actual coalesce batch
+        # sizes, and how many lazy publishes a reader ever forced
+        self._m_coalesce = reg.histogram("serve.ingest.coalesce_blocks")
+        self._m_deferred = reg.counter("serve.publish.deferred")
+        self._m_materialized = reg.counter("serve.publish.materialized")
         self._publisher = RingPublisher(runtime, ring)
         self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._state = state if state is not None else runtime.init()
@@ -249,6 +284,22 @@ class IngestLoop:
         """Ingest everything already queued, then publish that position."""
         return self.publish_now(timeout)
 
+    def sync(self) -> None:
+        """Block until the device work behind every dispatched ingest has
+        completed — a *measurement* barrier, not a serving primitive.
+
+        ``drain()`` resolves when the loop has dispatched everything
+        queued; the dispatches themselves stay asynchronous, and with
+        coalescing + lazy publishes a whole stream can fit the backend's
+        in-flight window — a timer stopped at ``drain()`` would then
+        measure enqueue, not compute. The bench harness calls this inside
+        its timed region so updates/sec means sustained ingest. Readers
+        never need it: they block on materializing their own answers.
+        """
+        import jax
+
+        jax.block_until_ready(self._state)
+
     def stop(self, *, drain: bool = True,
              timeout: float | None = None) -> QuerySnapshot | None:
         """Stop the loop; with ``drain`` (default) finish queued work and
@@ -271,9 +322,11 @@ class IngestLoop:
     def _run(self):
         rt = self.runtime
         chunk = rt.config.engine.chunk
-        sharding = rt.block_sharding()
+        workers = rt.workers
         ingest_plain = rt._ingest_blocks_fn
         ingest_donated = rt._feed_ingest_fn
+        stager = DeviceStager(sharding=rt.block_sharding(),
+                              depth=self.feed_depth)
         # first call must not donate the caller-provided initial state
         donate_ok = False
         since_publish = 0
@@ -282,40 +335,99 @@ class IngestLoop:
             # block always find a complete (possibly empty) snapshot
             self._publish()
             while True:
-                kind, payload = self._queue.get()
-                if kind == _STOP:
-                    break
-                if kind == _PUBLISH:
+                item = self._queue.get()
+                if item[0] != _BLOCK:
+                    kind, payload = item
+                    if kind == _STOP:
+                        break
                     since_publish = 0
                     donate_ok = False
                     payload.resolve(self._publish())
                     continue
-                t0 = time.perf_counter()
-                with self.tracer.span("ingest.step"):
-                    block = host_blocks(np.asarray(payload), rt.workers,
-                                        chunk)
-                    if block.shape[-1]:
-                        dev = jax.device_put(block, sharding)
-                        fn = ingest_donated if donate_ok else ingest_plain
-                        self._state = fn(self._state, dev)
-                        donate_ok = True
-                        items = int(np.asarray(payload).size)
-                        self.stats.add(blocks_ingested=1,
-                                       items_ingested=items)
-                        self._m_items.inc(items)
+
+                # drain every consecutively queued block; a control item
+                # ends the drain (blocks batched here all PRECEDE it in
+                # queue order, so ingest-then-resolve keeps publish_now's
+                # "after everything submitted so far" contract)
+                payloads = [item[1]]
+                ctl = None
+                while ctl is None:
+                    try:
+                        nxt = self._queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt[0] == _BLOCK:
+                        payloads.append(nxt[1])
                     else:
-                        self.stats.add(blocks_ingested=1)
-                self._m_blocks.inc()
-                self._m_step.record(time.perf_counter() - t0)
-                self._m_queue_depth.set(self._queue.qsize())
-                since_publish += 1
-                if since_publish >= self.publish_every:
+                        ctl = nxt
+
+                # pre-plan coalesce groups: capped at coalesce_max AND at
+                # the distance to the next publish boundary, so publish
+                # positions and counts are identical to the per-block loop
+                groups, i, sp = [], 0, since_publish
+                while i < len(payloads):
+                    cap = max(1, min(self.coalesce_max,
+                                     self.publish_every - sp))
+                    g = payloads[i:i + cap]
+                    groups.append(g)
+                    i += len(g)
+                    sp += len(g)
+                    if sp >= self.publish_every:
+                        sp = 0
+
+                # stage ahead (async device_put), then dispatch each
+                # group's single coalesced ingest; take() → top_up() →
+                # dispatch keeps feed_depth transfers in flight while the
+                # previous group's compute runs
+                gi = 0
+
+                def top_up():
+                    nonlocal gi
+                    while gi < len(groups) and stager.room:
+                        g = groups[gi]
+                        arrays = [np.asarray(p) for p in g]
+                        block = coalesce_blocks(arrays, workers, chunk)
+                        items = sum(int(a.size) for a in arrays)
+                        stager.stage(block, (len(g), items))
+                        gi += 1
+
+                top_up()
+                while len(stager):
+                    t0 = time.perf_counter()
+                    with self.tracer.span("ingest.step"):
+                        dev, (nb, items) = stager.take()
+                        top_up()
+                        if dev.shape[-1]:
+                            fn = (ingest_donated if donate_ok
+                                  else ingest_plain)
+                            self._state = fn(self._state, dev)
+                            donate_ok = True
+                            self.stats.add(blocks_ingested=nb,
+                                           items_ingested=items)
+                            self._m_items.inc(items)
+                        else:
+                            self.stats.add(blocks_ingested=nb)
+                    self._m_blocks.inc(nb)
+                    self._m_coalesce.record(nb)
+                    self._m_step.record(time.perf_counter() - t0)
+                    self._m_queue_depth.set(self._queue.qsize())
+                    since_publish += nb
+                    if since_publish >= self.publish_every:
+                        since_publish = 0
+                        # the published reduction (or a lazy snapshot's
+                        # captured reference) reads these state buffers;
+                        # the next ingest must not donate them (see
+                        # module docstring) — dispatch stays async
+                        donate_ok = False
+                        self._publish()
+
+                if ctl is not None:
+                    kind, payload = ctl
+                    if kind == _STOP:
+                        break
                     since_publish = 0
-                    # the published reduction reads these state buffers;
-                    # the next ingest must not donate them (see module
-                    # docstring) — dispatch stays async either way
                     donate_ok = False
-                    self._publish()
+                    payload.resolve(self._publish())
         except BaseException as e:           # pragma: no cover - rethreaded
             self._error = e
             # unblock any publish waiters; they re-raise via _check_error
@@ -328,11 +440,21 @@ class IngestLoop:
                 pass
 
     def _publish(self) -> QuerySnapshot:
-        # timed around the async dispatch + ring swap: this is the write
-        # path's entire snapshot cost (readers pay materialization)
+        # timed around the (async or deferred) dispatch + ring swap: this
+        # is the write path's entire snapshot cost (readers pay
+        # materialization). Lazy publishes capture the state reference +
+        # the writer's own item count (the count_floor ε filter) and ring
+        # immediately; the materialized counter tells the bench how many
+        # versions a reader ever actually forced.
         t0 = time.perf_counter()
+        lazy = self.lazy_publish
         with self.tracer.span("ingest.publish"):
-            snap = self._publisher.publish(self._state)
+            snap = self._publisher.publish(
+                self._state, lazy=lazy,
+                n_hint=self.stats.items_ingested if lazy else None,
+                on_materialize=self._m_materialized.inc if lazy else None)
+        if lazy:
+            self._m_deferred.inc()
         self._m_publish.record(time.perf_counter() - t0)
         self.stats.add(publishes=1)
         return snap

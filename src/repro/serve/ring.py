@@ -25,17 +25,24 @@ Why this is safe without a reader lock:
     just-published version simply waits for its own answer — the QPOPSS
     split: readers pay read latency, writers never pay for readers.
 
-Version-pinned reads (``get(version)``) serve read-your-writes flows; a
-version that has been overwritten raises :class:`StaleSnapshotError`
-instead of silently returning a different stream position — each slot is
-checked against the requested version after the (atomic) slot load, so an
-overwrite between load and check is detected, never masked.
+Version-pinned reads (``get(version)``) serve read-your-writes flows
+through a version→snapshot index (one dict lookup — O(1) at any depth,
+no modulo-slot scan); a version that has been evicted raises
+:class:`StaleSnapshotError` instead of silently returning a different
+stream position. Both the dict store and the lookup are single-bytecode
+dict operations, atomic under the interpreter, so the read path stays
+wait-free at depth 64 exactly as at depth 4.
 
 ``publish`` is single-writer by contract (the IngestLoop thread, or one
-driver loop); monotonicity is enforced, not assumed.
+driver loop); monotonicity is enforced, not assumed. Lazy snapshots
+(:class:`~repro.service.snapshot.LazyQuerySnapshot`) ring identically —
+eviction drops the ring's reference, but a reader that pinned one may
+still materialize it afterwards (the publisher's donation fence keeps
+the captured state valid; see DESIGN.md §13).
 """
 from __future__ import annotations
 
+import collections
 import threading
 
 from repro.service.snapshot import QuerySnapshot
@@ -52,7 +59,12 @@ class SnapshotRing:
         if depth < 1:
             raise ValueError(f"ring depth must be >= 1, got {depth}")
         self.depth = depth
-        self._slots: list[QuerySnapshot | None] = [None] * depth
+        # version → snapshot index + FIFO eviction order: get() is one
+        # dict lookup regardless of depth, and non-contiguous versions
+        # (a driver loop skipping numbers) evict oldest-first instead of
+        # colliding in a modulo slot
+        self._by_version: dict[int, QuerySnapshot] = {}
+        self._order: collections.deque = collections.deque()
         self._latest: QuerySnapshot | None = None
         # waiters only: publish notifies under this lock, but neither
         # publish's slot/latest stores nor latest()/get() ever take it —
@@ -74,8 +86,11 @@ class SnapshotRing:
                 f"publish: version {snap.version} is not after the "
                 f"latest published version {prev.version} (the ring is "
                 f"single-writer with strictly increasing versions)")
-        self._slots[snap.version % self.depth] = snap
+        self._by_version[snap.version] = snap
+        self._order.append(snap.version)
         self._latest = snap
+        while len(self._order) > self.depth:
+            self._by_version.pop(self._order.popleft(), None)
         with self._cond:
             self._cond.notify_all()
         return snap
@@ -95,13 +110,12 @@ class SnapshotRing:
     def get(self, version: int) -> QuerySnapshot:
         """The snapshot published as ``version`` — if it is still ringed.
 
-        The slot is loaded once (atomic) and then checked against the
-        requested version, so a concurrent overwrite yields
-        :class:`StaleSnapshotError`, never a snapshot from a different
-        stream position.
+        One atomic dict lookup (O(1) at any depth); a concurrent eviction
+        between publishs yields :class:`StaleSnapshotError`, never a
+        snapshot from a different stream position.
         """
-        snap = self._slots[version % self.depth]
-        if snap is None or snap.version != version:
+        snap = self._by_version.get(version)
+        if snap is None:
             raise StaleSnapshotError(
                 f"version {version} is not in the ring (latest "
                 f"{self.latest_version}, depth {self.depth}): it was "
@@ -140,6 +154,15 @@ class RingPublisher:
         self.runtime = runtime
         self.ring = ring
 
-    def publish(self, state) -> QuerySnapshot:
-        """Snapshot ``state`` (async dispatch; ingest-safe) and ring it."""
-        return self.ring.publish(self.runtime.snapshot(state))
+    def publish(self, state, *, lazy: bool = False,
+                n_hint: int | None = None,
+                on_materialize=None) -> QuerySnapshot:
+        """Snapshot ``state`` (async dispatch; ingest-safe) and ring it.
+
+        ``lazy=True`` publishes a deferred snapshot (reduction on first
+        read); the caller owes the donation fence on ``state`` — see
+        ``StreamRuntime.snapshot``.
+        """
+        return self.ring.publish(self.runtime.snapshot(
+            state, lazy=lazy, n_hint=n_hint,
+            on_materialize=on_materialize))

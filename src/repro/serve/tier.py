@@ -58,6 +58,11 @@ class ServingTier:
                         else StreamRuntime(config.runtime))
         self.publish_every = config.resolved_publish_every()
         self.ring = SnapshotRing(config.resolved_ring_depth())
+        # the async-pipeline knobs (DESIGN.md §13) resolve through the
+        # active plan exactly like the cadence above
+        self.coalesce_max = config.resolved_coalesce_max()
+        self.feed_depth = config.runtime.resolved_feed_depth()
+        self.lazy_publish = config.resolved_lazy_publish()
         # an injected registry/tracer wins; otherwise each tier scopes its
         # own (or the shared no-op instances when metrics are off)
         if registry is None:
@@ -70,6 +75,8 @@ class ServingTier:
         self.loop = IngestLoop(
             self.runtime, self.ring, publish_every=self.publish_every,
             queue_depth=config.queue_depth, admission=config.admission,
+            coalesce_max=self.coalesce_max, feed_depth=self.feed_depth,
+            lazy_publish=self.lazy_publish,
             registry=registry, tracer=tracer)
         self.frontend = ServeFrontend(self.ring, self.runtime.frontend(),
                                       registry=registry)
@@ -139,6 +146,9 @@ class ServingTier:
             "workers": self.runtime.workers,
             "publish_every": self.publish_every,
             "ring_depth": self.ring.depth,
+            "coalesce_max": self.coalesce_max,
+            "feed_depth": self.feed_depth,
+            "lazy_publish": self.lazy_publish,
             "queue_depth": self.config.queue_depth,
             "admission": self.config.admission,
             "latest_version": self.ring.latest_version,

@@ -25,6 +25,8 @@ threads / report ticks.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +55,26 @@ class QuerySnapshot:
         return min_frequency(self.summary)
 
     @property
+    def count_floor(self) -> int:
+        """⌊n/k⌋ — the a-priori ε bound on min_count (QPOPSS filter).
+
+        Since the k counters sum to at most n, the minimum counter can
+        never exceed ⌊n/k⌋ — a scalar bound derivable from item
+        accounting alone, no summary reduction required. Lazy snapshots
+        carry it as their publish-time filter scalar; the eager property
+        computes the same value from the materialized n.
+        """
+        return int(self.n) // self.k
+
+    @property
+    def materialized(self) -> bool:
+        """Eager snapshots are host-visible by construction."""
+        return True
+
+    def materialize(self) -> "QuerySnapshot":
+        return self
+
+    @property
     def occupancy(self) -> jax.Array:
         """Number of live (non-EMPTY) counters in the merged summary."""
         return (self.summary.items != EMPTY).sum()
@@ -74,6 +96,107 @@ class QuerySnapshot:
         }
 
 
+class LazyQuerySnapshot:
+    """A QuerySnapshot whose merged summary materializes on first read.
+
+    The QPOPSS split taken to its end (DESIGN.md §13): publishing becomes
+    O(1) on the write path — the publisher captures a *reference* to the
+    live device state plus cheap host scalars (version, kernel, the
+    ``count_floor`` ε filter) and defers the flush-view reduction until a
+    reader actually touches ``summary``/``n``. Versions nobody reads are
+    never reduced at all.
+
+    Lifetime rule (why the captured reference stays valid): the ingest
+    discipline fences donation after every publish — the one ingest step
+    that follows runs through the non-donating program, so the captured
+    state's buffers are never aliased into a later step. Materialization
+    therefore works even after this version has been evicted from the
+    SnapshotRing; the thunk is dropped after the first run so the state
+    reference is released as soon as the snapshot is self-contained.
+
+    Thread-safe: concurrent readers race to a double-checked lock; the
+    reduction runs exactly once and every reader gets the same frozen
+    :class:`QuerySnapshot`. Duck-types the eager snapshot (``summary`` /
+    ``n`` / ``shard_n`` / ``min_count`` / … delegate through
+    ``materialize()``), so frontends, health gauges, and the eval harness
+    consume either transparently.
+    """
+
+    def __init__(self, thunk: Callable[[], QuerySnapshot], *, version: int,
+                 kernel: str, k: int, n_hint: int | None = None,
+                 on_materialize: Callable[[], None] | None = None):
+        self._thunk = thunk
+        self._lock = threading.Lock()
+        self._snap: QuerySnapshot | None = None
+        self._on_materialize = on_materialize
+        self.version = int(version)
+        self.kernel = str(kernel)
+        self.k = int(k)
+        #: publish-time item count from the writer's own accounting —
+        #: equals the materialized n whenever the stream carried no
+        #: EMPTY sentinels (every in-tree producer); None → unknown.
+        self.n_hint = None if n_hint is None else int(n_hint)
+
+    @property
+    def materialized(self) -> bool:
+        return self._snap is not None
+
+    @property
+    def count_floor(self) -> int:
+        """⌊n/k⌋ without materializing (0 when no hint was published)."""
+        if self._snap is not None:
+            return self._snap.count_floor
+        if self.n_hint is not None:
+            return self.n_hint // self.k
+        return self.materialize().count_floor
+
+    def materialize(self) -> QuerySnapshot:
+        """Run the deferred reduction once; cached for every later read."""
+        snap = self._snap
+        if snap is None:
+            with self._lock:
+                if self._snap is None:
+                    self._snap = self._thunk()
+                    self._thunk = None      # release the state reference
+                    if self._on_materialize is not None:
+                        self._on_materialize()
+                        self._on_materialize = None
+                snap = self._snap
+        return snap
+
+    # -- eager-snapshot surface (delegating reads) ---------------------------
+
+    @property
+    def summary(self) -> Summary:
+        return self.materialize().summary
+
+    @property
+    def n(self) -> jax.Array:
+        return self.materialize().n
+
+    @property
+    def tenants(self) -> int:
+        return self.materialize().tenants
+
+    @property
+    def shard_n(self) -> jax.Array:
+        return self.materialize().shard_n
+
+    @property
+    def min_count(self) -> jax.Array:
+        return self.materialize().min_count
+
+    @property
+    def occupancy(self) -> jax.Array:
+        return self.materialize().occupancy
+
+    def total(self) -> int:
+        return self.materialize().total()
+
+    def describe(self) -> dict:
+        return self.materialize().describe()
+
+
 def publish(summary: Summary, n, shard_n, *, version: int,
             kernel: str) -> QuerySnapshot:
     """Freeze a merged summary into a QuerySnapshot.
@@ -91,3 +214,16 @@ def publish(summary: Summary, n, shard_n, *, version: int,
         shard_n=shard_n,
         kernel=str(kernel),
     )
+
+
+def publish_lazy(thunk: Callable[[], QuerySnapshot], *, version: int,
+                 kernel: str, k: int, n_hint: int | None = None,
+                 on_materialize=None) -> LazyQuerySnapshot:
+    """Freeze a *deferred* snapshot: cheap scalars now, reduction on read.
+
+    ``thunk`` must produce the eager :class:`QuerySnapshot` for exactly
+    this ``version`` (same state, same reduction — bitwise identity with
+    an eager publish is a gated invariant, tested per kernel impl).
+    """
+    return LazyQuerySnapshot(thunk, version=version, kernel=kernel, k=k,
+                             n_hint=n_hint, on_materialize=on_materialize)

@@ -347,6 +347,212 @@ def test_choose_publish_cadence_from_probe_rows():
 
 
 # ---------------------------------------------------------------------------
+# Async pipeline (DESIGN.md §13): coalescing, lazy publishes, deep rings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernel_matrix
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("coalesce", (1, 4, 64))
+def test_tier_coalesced_bitwise_identical(impl, coalesce):
+    """Coalescing changes how many blocks share one dispatch, never the
+    sketch (bitwise vs sync per-block ingest) nor the publish cadence —
+    64 exceeds the queue depth, i.e. every drain coalesces maximally."""
+    rt = _runtime(impl)
+    blocks = _blocks(rt, 7)
+
+    state = rt.init()
+    for b in blocks:
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    ref = rt.snapshot(state)
+
+    cfg = _config(impl, publish_every=3, coalesce_max=coalesce)
+    with ServingTier(cfg, runtime=rt) as tier:
+        for b in blocks:
+            tier.submit(b)
+        snap = tier.drain()
+        stats = tier.stats.describe()
+    _summaries_equal(ref, snap)
+    assert stats["blocks_ingested"] == 7
+    # initial + after blocks 3 and 6 + the drain publish — identical to
+    # the per-block loop regardless of how wakeups batched the queue
+    assert stats["publishes"] == 4
+
+
+@pytest.mark.kernel_matrix
+@pytest.mark.parametrize("impl", IMPLS)
+def test_runtime_lazy_snapshot_bitwise_eager(impl):
+    """A lazy publish materializes to exactly the eager snapshot, fires
+    its callback once, and exposes count_floor without materializing."""
+    rt = _runtime(impl)
+    state = rt.init()
+    for b in _blocks(rt, 3):
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    eager = rt.snapshot(state)
+    n = int(np.asarray(state.n).sum())
+
+    fired = []
+    lazy = rt.snapshot(state, lazy=True, n_hint=n,
+                       on_materialize=lambda: fired.append(1))
+    assert lazy.materialized is False
+    assert lazy.count_floor == n // K       # from n_hint, no reduction
+    assert lazy.materialized is False and not fired
+    _summaries_equal(eager, lazy)           # forces the reduction
+    assert lazy.materialized is True and fired == [1]
+    assert lazy.count_floor == eager.count_floor == n // K
+    lazy.materialize()
+    assert fired == [1]                     # callback fires exactly once
+
+
+def test_lazy_snapshot_survives_ring_eviction():
+    """The donation fence makes a lazy snapshot valid forever: hold one,
+    ingest far past its ring eviction, then materialize — bitwise the
+    sync prefix at the captured position."""
+    rt = _runtime()
+    blocks = _blocks(rt, 6)
+    state = rt.init()
+    for b in blocks[:2]:
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    ref = rt.snapshot(state)
+
+    cfg = _config(publish_every=1, ring_depth=2, lazy_publish=True)
+    with ServingTier(cfg, runtime=rt) as tier:
+        for b in blocks[:2]:
+            tier.submit(b)
+        held = tier.drain()
+        assert held.materialized is False
+        for b in blocks[2:]:
+            tier.submit(b)
+        tier.drain()
+        # the held version is long gone from the depth-2 ring
+        with pytest.raises(StaleSnapshotError):
+            tier.ring.get(held.version)
+    _summaries_equal(ref, held)
+    assert held.materialized is True
+
+
+def test_ring_depth_64_dict_index():
+    """Deep rings serve pinned reads in O(1) and evict strictly oldest-
+    first: after 200 publishes into depth 64, exactly versions 137..200
+    answer and everything older is stale."""
+    ring = SnapshotRing(depth=64)
+    for v in range(1, 201):
+        ring.publish(_snap(v))
+    assert ring.latest_version == 200
+    for v in range(137, 201):
+        assert ring.get(v).version == v
+    for v in (1, 100, 136):
+        with pytest.raises(StaleSnapshotError):
+            ring.get(v)
+
+
+def test_frontend_resolution_floor_fast_path():
+    """estimate(resolution<=count_floor) answers from publish-time
+    scalars — the summary is never touched, a lazy snapshot stays
+    unmaterialized, and the floor-answer counter records the short
+    circuit; one notch above the floor takes the real path."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serve.ring import RingPublisher
+
+    rt = _runtime()
+    state = rt.init()
+    for b in _blocks(rt, 4):
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    n = int(np.asarray(state.n).sum())
+    floor = n // K
+    assert floor >= 1
+
+    ring = SnapshotRing(depth=2)
+    RingPublisher(rt, ring).publish(state, lazy=True, n_hint=n)
+    snap = ring.latest()
+    reg = MetricsRegistry()
+    fe = ServeFrontend(ring, rt.frontend(), registry=reg)
+
+    est = fe.estimate([1, 2, 3], resolution=floor)
+    assert snap.materialized is False
+    assert est.n == n and est.version == snap.version
+    np.testing.assert_array_equal(est.f_hat,
+                                  np.full(3, floor, dtype=np.int64))
+    assert not est.lower.any() and not est.monitored.any()
+    assert reg.counter("serve.read.floor_answers").value == 1
+
+    est2 = fe.estimate([1, 2, 3], resolution=floor + 1)
+    assert snap.materialized is True
+    assert (est2.f_hat >= est2.lower).all()
+    assert reg.counter("serve.read.floor_answers").value == 1
+
+
+def test_plan_roundtrips_pipeline_knobs():
+    import dataclasses
+    import json
+
+    from repro.plan import ExecutionPlan, active_plan
+
+    plan = dataclasses.replace(active_plan(), coalesce_max=4,
+                               feed_depth=3, lazy_publish=True)
+    d = plan.to_json()
+    assert (d["coalesce_max"], d["feed_depth"], d["lazy_publish"]) == \
+        (4, 3, True)
+    back = ExecutionPlan.from_json(d)
+    assert (back.coalesce_max, back.feed_depth, back.lazy_publish) == \
+        (4, 3, True)
+    # plans cached before the async pipeline existed load with the
+    # legacy behavior: per-block dispatch, double-buffer, eager publish
+    legacy = {k: v for k, v in d.items()
+              if k not in ("coalesce_max", "feed_depth", "lazy_publish")}
+    old = ExecutionPlan.from_json(json.loads(json.dumps(legacy)))
+    assert (old.coalesce_max, old.feed_depth, old.lazy_publish) == \
+        (1, 2, False)
+    with pytest.raises(ValueError):
+        dataclasses.replace(plan, coalesce_max=0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(plan, feed_depth=0)
+
+
+def test_serve_config_resolves_pipeline_knobs_through_plan():
+    import dataclasses
+
+    from repro.plan import active_plan, use_plan
+
+    plan = dataclasses.replace(active_plan(), coalesce_max=6,
+                               feed_depth=3, lazy_publish=True)
+    with use_plan(plan):
+        cfg = _config(coalesce_max=None, lazy_publish=None)
+        assert cfg.resolved_coalesce_max() == 6
+        assert cfg.resolved_lazy_publish() is True
+        assert cfg.runtime.resolved_feed_depth() == 3
+        # explicit knobs always beat the plan — including explicit False
+        pinned = _config(coalesce_max=2, lazy_publish=False)
+        assert pinned.resolved_coalesce_max() == 2
+        assert pinned.resolved_lazy_publish() is False
+        rcfg = dataclasses.replace(cfg.runtime, feed_depth=5)
+        assert rcfg.resolved_feed_depth() == 5
+
+
+def test_choose_pipeline_from_probe_rows():
+    from repro.launch.tune import _choose_pipeline
+
+    rows = [
+        {"op": "pipeline", "knob": "coalesce", "m": 1, "block_s": 1.00},
+        {"op": "pipeline", "knob": "coalesce", "m": 2, "block_s": 0.62},
+        {"op": "pipeline", "knob": "coalesce", "m": 4, "block_s": 0.60},
+        {"op": "pipeline", "knob": "coalesce", "m": 8, "block_s": 0.61},
+        {"op": "pipeline", "knob": "feed", "depth": 1, "block_s": 1.00},
+        {"op": "pipeline", "knob": "feed", "depth": 2, "block_s": 0.80},
+        {"op": "pipeline", "knob": "feed", "depth": 4, "block_s": 0.79},
+        {"op": "pipeline", "knob": "publish", "step_s": 1.0,
+         "eager_s": 0.2},
+    ]
+    co, fe, lazy = _choose_pipeline(rows)
+    assert co == 4      # m=2 sits outside the 2% slack of the 0.60 best
+    assert fe == 2      # depth 2 is within slack of depth 4 — take less
+    assert lazy is True  # eager publish costs 20% of a step: defer it
+    assert _choose_pipeline([]) == (1, 2, False)
+    rows[-1] = {"op": "pipeline", "knob": "publish", "step_s": 1.0,
+                "eager_s": 0.01}
+    assert _choose_pipeline(rows)[2] is False   # publish already cheap
+
+
+# ---------------------------------------------------------------------------
 # Liveness under interleaved submit/read (the tier's whole point)
 # ---------------------------------------------------------------------------
 
