@@ -1,7 +1,7 @@
-"""Observability overhead + health-consistency gates (DESIGN.md §12).
+"""Observability overhead + health + drift + flight gates (DESIGN.md §12, §14).
 
-Two claims make the obs layer safe to leave on in production, and this
-harness turns both into CI gates (the obs-smoke leg):
+Four claims make the obs layer safe to leave on in production, and this
+harness turns them into CI gates (the obs-smoke leg):
 
   1. **Overhead.** Instrumentation must be nearly free on the hot path:
      sustained ingest throughput with the tier's metrics/tracer/health
@@ -22,6 +22,23 @@ harness turns both into CI gates (the obs-smoke leg):
      compare with ``==`` exactly — a one-off threshold or candidate
      count means the gauges and the report disagree about the paper's
      guarantee.
+  3. **Drift accuracy.** The online skew estimator
+     (``repro.obs.drift.fit_zipf_skew``) must bracket the *generator's*
+     zipf parameter inside its own reported confidence interval at
+     every committed profile (s ∈ SKEWS = {1.1, 1.5, 2.0}) — an
+     estimator whose CI does not cover truth would silently mis-predict
+     the 1401.0702 ε bound it feeds.
+  4. **Flight recording.** An induced IngestLoop failure (a poison
+     block that raises during host staging) must produce one complete,
+     strict-JSON, schema-valid flight-recorder artifact
+     (``repro.obs.recorder.validate_flight_record``) carrying the
+     traceback and at least one pre-error postmortem frame. The
+     artifact is written next to BENCH_obs.json and uploaded by CI.
+
+The overhead arms run with the FULL sentinel on: the metrics-ON tier
+carries timeseries sampling, drift estimation, alert evaluation, and
+flight-recorder frame capture — the ≥ ``--min-ratio`` gate prices the
+whole §14 stack, not just counters.
 
 Results: ``name,value,derived`` CSV on stdout + ``BENCH_obs.json``.
 
@@ -53,9 +70,131 @@ def compare_health(health: dict, reference: dict) -> list[str]:
     return mismatches
 
 
+def run_drift_phase(rt, *, blocks, block_items, chunk, seed,
+                    emit=lambda *a: None) -> list[dict]:
+    """Skew-estimator accuracy at every committed profile (gate 3).
+
+    For each s in ``eval.accuracy.SKEWS``: synchronous reference ingest
+    of a fresh zipf(s) stream, one snapshot, one ``fit_zipf_skew`` over
+    the sketch's own counters — exactly the estimator the tier's
+    DriftEstimator runs off ring publishes — plus the 1401.0702
+    predicted-ε mapping at the estimate vs the sketch's actual
+    min-count.
+    """
+    import numpy as np
+
+    from repro.core.spacesaving import EMPTY
+    from repro.data.synthetic import zipf_stream
+    from repro.eval.accuracy import SKEWS
+    from repro.obs.drift import fit_zipf_skew, predicted_min_count
+    from repro.obs.health import sketch_health
+    from repro.runtime.feed import host_blocks
+
+    results = []
+    for si, s_true in enumerate(SKEWS):
+        state = rt.init()
+        for i in range(blocks):
+            b = zipf_stream(block_items, s_true,
+                            seed=seed + 1000 * (si + 1) + i, max_id=10**6)
+            state = rt.ingest(state, host_blocks(b, rt.workers, chunk))
+        snap = rt.snapshot(state)
+        h = sketch_health(snap)
+        items = np.asarray(snap.summary.items)
+        counts = np.where(items != EMPTY,
+                          np.asarray(snap.summary.counts), 0)
+        fit = fit_zipf_skew(counts, np.asarray(snap.summary.errors))
+        pred = predicted_min_count(h["n"], h["k"], fit["s"])
+        within = bool(fit["ci_low"] <= s_true <= fit["ci_high"])
+        row = {"s_true": s_true, "s_est": fit["s"],
+               "ci_low": fit["ci_low"], "ci_high": fit["ci_high"],
+               "stderr": fit["stderr"], "ranks_used": fit["ranks_used"],
+               "r2": fit["r2"], "within_ci": within, "n": h["n"],
+               "k": h["k"], "predicted_min_count": pred,
+               "actual_min_count": h["min_count"],
+               "epsilon_vs_predicted": (h["min_count"] / pred
+                                        if pred and pred == pred else
+                                        None)}
+        results.append(row)
+        emit(f"obs_drift_s{s_true}", f"{fit['s']:.4f}",
+             f"ci=[{fit['ci_low']:.4f},{fit['ci_high']:.4f}] "
+             f"within={within} ranks={fit['ranks_used']}")
+    return results
+
+
+class _PoisonBlock:
+    """A submitted block that raises during host staging — the induced
+    IngestLoop failure of the flight gate (never touches the device)."""
+
+    def __array__(self, dtype=None, copy=None):
+        raise RuntimeError("bench_obs induced ingest failure")
+
+
+def run_flight_phase(rt, *, chunk, flight_path,
+                     emit=lambda *a: None) -> dict:
+    """Induced-error flight-recorder dump (gate 4)."""
+    import json
+    import os
+    import time
+
+    from repro.data.synthetic import zipf_stream
+    from repro.obs.recorder import validate_flight_record
+    from repro.serve import ServeConfig, ServingTier
+
+    if os.path.exists(flight_path):
+        os.remove(flight_path)
+    cfg = ServeConfig(runtime=rt.config, publish_every=2, ring_depth=2,
+                      coalesce_max=1, lazy_publish=False,
+                      sample_interval_s=0.05, flight_path=flight_path)
+    tier = ServingTier(cfg, runtime=rt)
+    result = {"path": flight_path, "valid": False, "reason": None,
+              "frames": 0, "error_type": None}
+    with tier:
+        # healthy traffic first, so the postmortem ring holds real
+        # pre-error frames and the dump shows the tier *before* it died
+        for i in range(4):
+            tier.submit(zipf_stream(rt.workers * chunk, 1.2,
+                                    seed=90 + i, max_id=10**5))
+        tier.drain()
+        time.sleep(3 * cfg.sample_interval_s)
+        tier.submit(_PoisonBlock())
+        deadline = time.perf_counter() + 10.0
+        while (time.perf_counter() < deadline
+               and tier.recorder.last_dump_path is None):
+            time.sleep(0.05)
+        try:
+            tier.stop(drain=False)
+        except RuntimeError:
+            pass                    # the induced error, re-raised
+    if tier.recorder.last_dump_path is None:
+        result["reason"] = "no dump produced within timeout"
+        emit("obs_flight_valid", "false", result["reason"])
+        return result
+    try:
+        with open(flight_path) as f:
+            record = validate_flight_record(json.load(f))
+    except (OSError, ValueError) as e:
+        result["reason"] = f"dump invalid: {e}"
+        emit("obs_flight_valid", "false", result["reason"])
+        return result
+    err = record.get("error") or {}
+    result.update({
+        "valid": bool(record["reason"] == "ingest_error"
+                      and err.get("type") == "RuntimeError"
+                      and len(record["frames"]) >= 1),
+        "reason": record["reason"],
+        "frames": len(record["frames"]),
+        "error_type": err.get("type"),
+    })
+    emit("obs_flight_valid", str(result["valid"]).lower(),
+         f"reason={result['reason']} frames={result['frames']} "
+         f"error={result['error_type']}")
+    return result
+
+
 def run_bench(*, impl="jnp", k=2048, lanes=2, chunk=2048, depth=4,
               blocks=128, layers=4, publish_every=None, ring_depth=None,
               queue_depth=8, kmaj=64, reps=3, seed=0,
+              flight_path="BENCH_obs_flight.json",
               emit=lambda *a: None) -> dict:
     import jax
 
@@ -127,6 +266,17 @@ def run_bench(*, impl="jnp", k=2048, lanes=2, chunk=2048, depth=4,
     emit("obs_pipeline_health_deferred",
          pipeline.get("health_deferred", 0), "lazy versions skipped")
 
+    # drift phase (gate 3): ~400k items per profile is where the fit's
+    # jackknife CI was calibrated; more adds ingest time, not accuracy
+    drift_blocks = max(8, min(blocks, 400_000 // block_items + 1))
+    drift = run_drift_phase(rt, blocks=drift_blocks,
+                            block_items=block_items, chunk=chunk,
+                            seed=seed, emit=emit)
+
+    # flight phase (gate 4): induced ingest error → one valid artifact
+    flight = run_flight_phase(rt, chunk=chunk, flight_path=flight_path,
+                              emit=emit)
+
     return {
         "config": {
             "impl": impl, "k": k, "lanes": lanes, "chunk": chunk,
@@ -149,6 +299,8 @@ def run_bench(*, impl="jnp", k=2048, lanes=2, chunk=2048, depth=4,
             "mismatches": mismatches,
         },
         "pipeline": pipeline,
+        "drift": drift,
+        "flight": flight,
         "metrics_on_stats": last_on["stats"],
     }
 
@@ -166,6 +318,20 @@ def check_record(record: dict, *, min_ratio: float) -> list[str]:
     if not record["health"]["tier"]:
         failures.append("metrics-on tier published no health — the "
                         "monitor measured nothing")
+    drift = record.get("drift") or []
+    if not drift:
+        failures.append("drift phase produced no profiles")
+    for row in drift:
+        if not row["within_ci"]:
+            failures.append(
+                f"drift estimator missed s={row['s_true']}: estimated "
+                f"{row['s_est']:.4f}, CI [{row['ci_low']:.4f}, "
+                f"{row['ci_high']:.4f}] does not cover truth")
+    flight = record.get("flight") or {}
+    if not flight.get("valid"):
+        failures.append(
+            f"flight-recorder gate failed — "
+            f"{flight.get('reason', 'phase did not run')}")
     return failures
 
 
@@ -191,8 +357,11 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="CI-smoke sizes (k=256, chunk=512, fewer blocks)")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 unless overhead + health gates hold")
+                    help="exit 1 unless overhead + health + drift + "
+                         "flight gates hold")
     ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--flight-out", default="BENCH_obs_flight.json",
+                    help="induced-error flight-recorder artifact path")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -217,7 +386,8 @@ def main(argv=None) -> int:
         depth=args.depth, blocks=args.blocks, layers=args.layers,
         publish_every=publish_every, ring_depth=ring_depth,
         queue_depth=args.queue_depth, kmaj=args.k_majority,
-        reps=args.reps, seed=args.seed, emit=emit)
+        reps=args.reps, seed=args.seed, flight_path=args.flight_out,
+        emit=emit)
 
     Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
     emit("obs_json", args.out, "written")
@@ -228,7 +398,7 @@ def main(argv=None) -> int:
             for f in failures:
                 print(f"CHECK FAILED: {f}", file=sys.stderr)
             return 1
-        print("check,ok,overhead + health-consistency gates hold",
+        print("check,ok,overhead + health + drift + flight gates hold",
               flush=True)
     return 0
 

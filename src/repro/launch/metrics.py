@@ -13,26 +13,33 @@ samples) and prints what a live deployment would export (DESIGN.md §12):
   ``--events N``      additionally print the last N tier trace events as
                       JSON lines (the span ring).
 
+``--watch`` switches to the drift-sentinel live view (DESIGN.md §14):
+the tier ingests a paced zipf stream for ``--duration`` seconds while
+one status line per ``--refresh`` interval reports the windowed
+time-series aggregates (ingest rate, queue depth), the latest health
+(n, live ε fraction) and drift (estimated skew ± CI, churn) frames, and
+any firing alerts; new trace events stream incrementally underneath via
+``Tracer.export(since_event_id=...)``. ``--dump-flight PATH`` writes
+the flight-recorder artifact at the end of either mode.
+
   python -m repro.launch.metrics                      # JSON dump
   python -m repro.launch.metrics --format prom
   python -m repro.launch.metrics --events 32
+  python -m repro.launch.metrics --watch --duration 5
+  python -m repro.launch.metrics --watch --dump-flight flight.json
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
 
-def run_tier_dump(*, k=256, lanes=2, chunk=512, depth=2, blocks=16,
-                  layers=2, publish_every=2, ring_depth=4, kmaj=64,
-                  seed=0):
-    """One small tier run → (describe dict, tier registry, tier tracer)."""
-    import numpy as np
-
-    from repro.data.synthetic import zipf_stream
+def _build_tier(*, k, lanes, chunk, depth, publish_every, ring_depth,
+                kmaj, flight_path=None):
     from repro.engine import EngineConfig
-    from repro.runtime import RuntimeConfig, StreamRuntime
+    from repro.runtime import RuntimeConfig
     from repro.serve import ServeConfig, ServingTier
 
     cfg = ServeConfig(
@@ -41,8 +48,26 @@ def run_tier_dump(*, k=256, lanes=2, chunk=512, depth=2, blocks=16,
                                 buffer_depth=depth),
             shards=1),
         publish_every=publish_every, ring_depth=ring_depth,
-        health_k_majority=kmaj)
-    tier = ServingTier(cfg)
+        health_k_majority=kmaj,
+        **({"flight_path": flight_path} if flight_path else {}))
+    return ServingTier(cfg)
+
+
+def run_tier_dump(*, k=256, lanes=2, chunk=512, depth=2, blocks=16,
+                  layers=2, publish_every=2, ring_depth=4, kmaj=64,
+                  seed=0, flight_path=None):
+    """One small tier run → (describe dict, tier registry, tier tracer).
+
+    With ``flight_path``, additionally dumps the flight-recorder
+    artifact there before the tier shuts down.
+    """
+    import numpy as np
+
+    from repro.data.synthetic import zipf_stream
+
+    tier = _build_tier(k=k, lanes=lanes, chunk=chunk, depth=depth,
+                       publish_every=publish_every, ring_depth=ring_depth,
+                       kmaj=kmaj, flight_path=flight_path)
     block_items = tier.runtime.workers * chunk * layers
     queries = np.asarray(
         np.random.default_rng(seed).integers(0, 10**5, size=8)
@@ -58,7 +83,90 @@ def run_tier_dump(*, k=256, lanes=2, chunk=512, depth=2, blocks=16,
         tier.frontend.k_majority_report(kmaj)
         tier.health_report()
         desc = tier.describe()
+        if flight_path:
+            tier.dump_flight_record(flight_path)
     return desc, tier.registry, tier.tracer
+
+
+def _status_line(t_s, tier, store) -> str:
+    from repro.obs.trace import fmt_event
+
+    fields = {"t_s": t_s}
+    rate = store.value("serve.ingest.blocks", "rate", 2.0)
+    depth = store.value("serve.ingest.queue_depth", "mean", 2.0)
+    if rate is not None:
+        fields["blk_per_s"] = rate
+    if depth is not None:
+        fields["queue"] = depth
+    h = tier.health.latest() if tier.health is not None else None
+    if h:
+        fields["n"] = h["n"]
+        fields["eps_frac"] = h["epsilon_frac"]
+        fields["occ"] = h["occupancy_frac"]
+    d = tier.drift.latest() if tier.drift is not None else None
+    if d and d.get("skew") == d.get("skew"):        # skew is not NaN
+        fields["skew"] = d["skew"]
+        ci = d.get("skew_ci_high")
+        if ci is not None and ci == ci:
+            fields["skew_ci"] = ci - d["skew"]
+        churn = d.get("top_churn")
+        if churn is not None and churn == churn:
+            fields["churn"] = churn
+    firing = tier.alerts.active() if tier.alerts is not None else []
+    if firing:
+        fields["alerts"] = ",".join(a["rule"] for a in firing)
+    return fmt_event("watch", fields)
+
+
+def run_watch(*, k=256, lanes=2, chunk=512, depth=2, layers=2,
+              publish_every=2, ring_depth=4, kmaj=64, seed=0,
+              duration=5.0, refresh_s=0.5, skew=1.2, events=False,
+              flight_path=None, _printer=print):
+    """Live sentinel view: paced ingest + one status line per refresh.
+
+    Returns the final ``describe()`` dict. The producer (this thread)
+    paces block submission across ``duration`` seconds so the windowed
+    rates are meaningful; each refresh prints the sentinel surface and,
+    with ``events``, streams new trace events via incremental export.
+    """
+    from repro.data.synthetic import zipf_stream
+
+    tier = _build_tier(k=k, lanes=lanes, chunk=chunk, depth=depth,
+                       publish_every=publish_every, ring_depth=ring_depth,
+                       kmaj=kmaj, flight_path=flight_path)
+    store = tier.registry.timeseries
+    block_items = tier.runtime.workers * chunk * layers
+    last_event_id = 0
+    with tier:
+        t0 = time.perf_counter()
+        next_refresh = t0 + refresh_s
+        i = 0
+        while True:
+            now = time.perf_counter()
+            if now - t0 >= duration:
+                break
+            tier.submit(zipf_stream(block_items, skew, seed=seed + i,
+                                    max_id=10**5))
+            i += 1
+            if now >= next_refresh:
+                next_refresh = now + refresh_s
+                _printer(_status_line(round(now - t0, 2), tier, store))
+                if events:
+                    out = tier.tracer.export(
+                        since_event_id=last_event_id, last=8)
+                    if out:
+                        _printer(out)
+                        last_event_id = max(
+                            e["id"] for e in tier.tracer.events())
+        tier.drain()
+        tier.health_report()
+        _printer(_status_line(round(time.perf_counter() - t0, 2), tier,
+                              store))
+        desc = tier.describe()
+        if flight_path:
+            path = tier.dump_flight_record(flight_path)
+            _printer(f"[watch] flight record -> {path}")
+    return desc
 
 
 def main(argv=None) -> int:
@@ -77,15 +185,39 @@ def main(argv=None) -> int:
     ap.add_argument("--ring-depth", type=int, default=4)
     ap.add_argument("--k-majority", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--watch", action="store_true",
+                    help="live sentinel view: paced ingest with one "
+                         "status line per refresh")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="--watch run length in seconds")
+    ap.add_argument("--refresh", type=float, default=0.5,
+                    help="--watch status-line interval in seconds")
+    ap.add_argument("--skew", type=float, default=1.2,
+                    help="--watch zipf skew of the synthetic stream")
+    ap.add_argument("--dump-flight", default=None, metavar="PATH",
+                    help="write the flight-recorder artifact here at "
+                         "the end of the run")
     args = ap.parse_args(argv)
 
     from repro.obs import metrics as obs_metrics
+
+    if args.watch:
+        run_watch(
+            k=args.k, lanes=args.lanes, chunk=args.chunk,
+            depth=args.depth, layers=args.layers,
+            publish_every=args.publish_every, ring_depth=args.ring_depth,
+            kmaj=args.k_majority, seed=args.seed,
+            duration=args.duration, refresh_s=args.refresh,
+            skew=args.skew, events=bool(args.events),
+            flight_path=args.dump_flight)
+        return 0
 
     desc, registry, tracer = run_tier_dump(
         k=args.k, lanes=args.lanes, chunk=args.chunk, depth=args.depth,
         blocks=args.blocks, layers=args.layers,
         publish_every=args.publish_every, ring_depth=args.ring_depth,
-        kmaj=args.k_majority, seed=args.seed)
+        kmaj=args.k_majority, seed=args.seed,
+        flight_path=args.dump_flight)
 
     if args.format == "prom":
         sys.stdout.write(registry.prometheus())

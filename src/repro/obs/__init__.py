@@ -16,21 +16,45 @@ pieces threaded through every serving component:
     split, bitwise-consistent with the eval harness's oracle-free
     invariants and refreshed off the ring by a reader-side monitor.
 
-Dump the live surface with ``python -m repro.launch.metrics`` or read
+The drift sentinel (DESIGN.md §14) builds four more pieces on top:
+
+  * :mod:`repro.obs.timeseries` — bounded ring-buffer histories behind
+    every instrument, pumped by ``MetricsRegistry.sample()``, with
+    windowed aggregates (rate, delta, mean, p50/p99-over-window);
+  * :mod:`repro.obs.drift` — online zipf-skew estimation with a
+    jackknife confidence interval, the arXiv:1401.0702 skew→ε bound
+    vs the sketch's actual min-count, top-n churn, saturation burn;
+  * :mod:`repro.obs.alerts` — declarative rules over time-series
+    windows with an ok→pending→firing→resolved lifecycle;
+  * :mod:`repro.obs.recorder` — a flight recorder: continuous frame
+    capture into a postmortem ring, dumped as one strict-JSON artifact
+    on ingest error, first critical alert, or on demand.
+
+Dump the live surface with ``python -m repro.launch.metrics`` (or
+``--watch`` for the live sentinel view), or read
 ``ServingTier.describe()``.
 """
+from repro.obs.alerts import AlertManager, AlertRule, default_rules
+from repro.obs.drift import (DriftEstimator, fit_zipf_skew,
+                             predicted_min_count, top_n_churn)
 from repro.obs.health import HealthGauges, HealthMonitor, sketch_health
 from repro.obs.metrics import (DEFAULT as DEFAULT_REGISTRY, NULL as
                                NULL_REGISTRY, Counter, Gauge, Histogram,
                                MetricsRegistry, default_registry,
-                               log_bounds)
+                               log_bounds, prom_escape_label)
+from repro.obs.recorder import (FlightRecorder, validate_flight_record)
+from repro.obs.timeseries import (MetricsSampler, TimeSeriesStore)
 from repro.obs.trace import (DEFAULT as DEFAULT_TRACER, NULL as
                              NULL_TRACER, Tracer, event, fmt_event, log,
                              span)
 
 __all__ = [
-    "Counter", "DEFAULT_REGISTRY", "DEFAULT_TRACER", "Gauge",
+    "AlertManager", "AlertRule", "Counter", "DEFAULT_REGISTRY",
+    "DEFAULT_TRACER", "DriftEstimator", "FlightRecorder", "Gauge",
     "HealthGauges", "HealthMonitor", "Histogram", "MetricsRegistry",
-    "NULL_REGISTRY", "NULL_TRACER", "Tracer", "default_registry",
-    "event", "fmt_event", "log", "log_bounds", "sketch_health", "span",
+    "MetricsSampler", "NULL_REGISTRY", "NULL_TRACER", "TimeSeriesStore",
+    "Tracer", "default_registry", "default_rules", "event",
+    "fit_zipf_skew", "fmt_event", "log", "log_bounds",
+    "predicted_min_count", "prom_escape_label", "sketch_health", "span",
+    "top_n_churn", "validate_flight_record",
 ]

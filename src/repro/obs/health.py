@@ -34,6 +34,7 @@ newest version (the drain/report path needs the true final position).
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
@@ -110,6 +111,9 @@ class HealthGauges:
         self.k_majority = k_majority
         self.prefix = prefix
         self._latest: dict | None = None
+        self.skipped_stale = 0
+        self._skipped_gauge = registry.gauge(
+            f"{prefix}.refreshes_skipped_stale")
         # one update at a time: interleaved updates of two versions would
         # publish gauges mixed across snapshots
         self._lock = threading.Lock()
@@ -120,6 +124,9 @@ class HealthGauges:
         with self._lock:
             if self._latest is not None and (
                     h["version"] < self._latest["version"]):
+                # a wedged/racing updater is itself observable
+                self.skipped_stale += 1
+                self._skipped_gauge.set(self.skipped_stale)
                 return self._latest
             for field in _GAUGE_FIELDS:
                 if field in h:
@@ -141,13 +148,26 @@ class HealthMonitor:
     versions are skipped, never queued), and pays the snapshot
     materialization on this thread: the writer-side cost of a health
     refresh is zero, exactly like any other reader of the ring.
+
+    The monitor makes its own wedging observable: the
+    ``health.last_refresh_age_s`` gauge is advanced on every poll-loop
+    pass — including passes where the ring produced nothing — so a tier
+    whose ring stopped publishing shows a growing age instead of a
+    silently-frozen health surface (the stock staleness alert rule
+    reads exactly this gauge). With a :class:`~repro.obs.drift.
+    DriftEstimator` attached, every health refresh also refreshes the
+    drift frame from the same snapshot — one materialization feeds
+    both.
     """
 
     def __init__(self, ring, registry, *, k_majority: int | None = None,
-                 poll_s: float = 0.1):
+                 poll_s: float = 0.1, drift=None):
         self.ring = ring
         self.gauges = HealthGauges(registry, k_majority=k_majority)
+        self.drift = drift
         self._poll_s = poll_s
+        self._age_gauge = registry.gauge("health.last_refresh_age_s")
+        self._last_refresh_t: float | None = None
         self._stop = threading.Event()
         self._thread = threading.Thread(
             target=self._run, name="repro-obs-health", daemon=True)
@@ -171,10 +191,31 @@ class HealthMonitor:
     def refresh(self) -> dict | None:
         """Synchronously refresh from the ring's newest version."""
         snap = self.ring.latest()
-        return self.gauges.update(snap) if snap is not None else None
+        return self._apply(snap) if snap is not None else None
 
     def latest(self) -> dict | None:
         return self.gauges.latest()
+
+    @property
+    def last_refresh_age_s(self) -> float | None:
+        """Seconds since the last successful refresh (None before any)."""
+        if self._last_refresh_t is None:
+            return None
+        return time.perf_counter() - self._last_refresh_t
+
+    def _apply(self, snap) -> dict:
+        """Gauges + drift frame from one snapshot; stamps the age clock."""
+        h = self.gauges.update(snap)
+        self._last_refresh_t = time.perf_counter()
+        self._age_gauge.set(0.0)
+        if self.drift is not None:
+            self.drift.update(snap, h, self._last_refresh_t)
+        return h
+
+    def _tick_age(self) -> None:
+        age = self.last_refresh_age_s
+        if age is not None:
+            self._age_gauge.set(age)
 
     def _run(self):
         m_deferred = self.gauges.registry.counter("obs.health.deferred")
@@ -183,6 +224,7 @@ class HealthMonitor:
             try:
                 self.ring.wait_for(seen + 1, timeout=self._poll_s)
             except TimeoutError:
+                self._tick_age()    # a silent ring still ages the gauge
                 continue
             snap = self.ring.latest()       # coalesce to the newest
             if getattr(snap, "materialized", True) is False:
@@ -192,9 +234,10 @@ class HealthMonitor:
                 # is surfaced by refresh()/stop()'s final refresh)
                 m_deferred.inc()
                 seen = snap.version
+                self._tick_age()
                 continue
             try:
-                h = self.gauges.update(snap)
+                h = self._apply(snap)
             except Exception:               # a torn-down ring at shutdown
                 if self._stop.is_set():     # pragma: no cover - race
                     return

@@ -149,6 +149,17 @@ class Histogram:
         with self._lock:
             return self._count
 
+    @property
+    def bounds(self) -> tuple:
+        """The fixed bucket upper edges (shared with HistogramSeries)."""
+        return self._bounds
+
+    def raw(self) -> tuple:
+        """(count, sum, per-bucket counts) in one lock acquisition — the
+        time-series sampler's read surface (one consistent frame)."""
+        with self._lock:
+            return self._count, self._sum, tuple(self._counts)
+
     def percentile(self, q: float) -> float:
         """Conservative q-th percentile from the bucket counts (nan if
         empty): the bucket's upper edge, clamped to the observed max."""
@@ -256,6 +267,7 @@ class _NullHistogram:
     name = "<null>"
     count = 0
     error_bound = 0.0
+    bounds = ()
 
     def record(self, value: float) -> None:
         pass
@@ -272,6 +284,9 @@ class _NullHistogram:
     def buckets(self) -> list:
         return []
 
+    def raw(self) -> tuple:
+        return 0, 0.0, ()
+
 
 _NULL_COUNTER = _NullCounter()
 _NULL_GAUGE = _NullGauge()
@@ -282,6 +297,27 @@ def _prom_name(name: str) -> str:
     """Sanitize a dotted instrument name to the Prometheus charset."""
     out = "".join(c if (c.isalnum() or c in "_:") else "_" for c in name)
     return out if (out and not out[0].isdigit()) else "_" + out
+
+
+def prom_escape_label(value) -> str:
+    """Escape one label VALUE per the Prometheus text exposition format:
+    backslash, double-quote, and newline must be backslash-escaped inside
+    the quoted value (names are sanitized; values are escaped — an alert
+    rule named ``queue "hot"\\n`` must not corrupt the scrape)."""
+    return (str(value).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def prom_sample(name: str, labels: dict | None, value) -> str:
+    """One exposition line ``name{k="v",...} value`` with escaped label
+    values (the conformance-tested label surface of the export)."""
+    pname = _prom_name(name)
+    if labels:
+        body = ",".join(
+            f'{_prom_name(str(k))}="{prom_escape_label(v)}"'
+            for k, v in labels.items())
+        return f"{pname}{{{body}}} {value}"
+    return f"{pname} {value}"
 
 
 class MetricsRegistry:
@@ -295,10 +331,13 @@ class MetricsRegistry:
     gate measures against.
     """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True,
+                 series_capacity: int | None = None):
         self.enabled = enabled
         self._instruments: dict = {}
         self._lock = threading.Lock()
+        self._series_capacity = series_capacity
+        self._timeseries = None
 
     def _get(self, name: str, cls, *args):
         with self._lock:
@@ -331,6 +370,44 @@ class MetricsRegistry:
         with self._lock:
             return sorted(self._instruments)
 
+    def instruments(self) -> list:
+        """A consistent (name, instrument) listing, name-sorted."""
+        with self._lock:
+            return sorted(self._instruments.items())
+
+    # -- time-series pump (DESIGN.md §14) ------------------------------------
+
+    @property
+    def timeseries(self):
+        """This registry's bounded-history store (NULL when disabled).
+
+        Created lazily on the first access/sample so registries that are
+        never pumped (most: the process DEFAULT, test registries) carry
+        no history arrays at all.
+        """
+        if not self.enabled:
+            from repro.obs.timeseries import NULL_STORE
+            return NULL_STORE
+        store = self._timeseries
+        if store is None:
+            from repro.obs.timeseries import (DEFAULT_CAPACITY,
+                                              TimeSeriesStore)
+            with self._lock:
+                if self._timeseries is None:
+                    self._timeseries = TimeSeriesStore(
+                        self._series_capacity or DEFAULT_CAPACITY)
+                store = self._timeseries
+        return store
+
+    def sample(self, t: float | None = None) -> float | None:
+        """Append one timestamped sample of every instrument to the
+        time-series store (the MetricsSampler pump calls this on its
+        fixed interval). Returns the sample time; a disabled registry
+        returns None without touching anything — the zero-cost path."""
+        if not self.enabled:
+            return None
+        return self.timeseries.sample_registry(self, t)
+
     def describe(self) -> dict:
         """Plain {name: instrument.describe()} dict, name-sorted."""
         with self._lock:
@@ -353,9 +430,13 @@ class MetricsRegistry:
             else:
                 d = inst.describe()
                 lines.append(f"# TYPE {pname} histogram")
+                # exposition-format conformance: _bucket counts are
+                # cumulative over increasing le, the +Inf bucket equals
+                # _count, and label values go through the escaper
                 for edge, cum in inst.buckets():
                     le = "+Inf" if math.isinf(edge) else repr(edge)
-                    lines.append(f'{pname}_bucket{{le="{le}"}} {cum}')
+                    lines.append(
+                        prom_sample(f"{name}_bucket", {"le": le}, cum))
                 lines.append(f"{pname}_sum {d['sum']}")
                 lines.append(f"{pname}_count {d['count']}")
         return "\n".join(lines) + ("\n" if lines else "")

@@ -11,7 +11,12 @@ emit telemetry instead of ad-hoc ``print`` formatting.
 Span events record completion order (a child closes before its parent),
 with ``id``/``parent``/``depth`` carrying the nesting so consumers can
 rebuild the tree; ``t`` is a ``time.perf_counter()`` timestamp, so
-deltas — not absolute times — are meaningful.
+deltas — not absolute times — are meaningful within one process. Each
+event additionally carries ``epoch`` (wall-clock ``time.time()``),
+``pid`` and ``tid``, so exports from multiple tiers/processes can be
+merged on a shared clock and correlated with flight-recorder dumps;
+``export(since_event_id=...)`` tails the ring incrementally by the
+monotone event id.
 
 With ``annotate=True`` every span also enters a
 ``jax.profiler.TraceAnnotation`` of the same name, so device timelines
@@ -24,6 +29,7 @@ import collections
 import contextlib
 import itertools
 import json
+import os
 import threading
 import time
 
@@ -89,6 +95,8 @@ class Tracer:
                 ann.__exit__(None, None, None)
             ev = {"kind": "span", "id": sid, "parent": parent,
                   "depth": depth, "name": name, "t": t0, "dur_s": dur,
+                  "epoch": time.time() - dur, "pid": os.getpid(),
+                  "tid": threading.get_ident(),
                   "thread": threading.current_thread().name}
             if attrs:
                 ev["attrs"] = attrs
@@ -100,6 +108,8 @@ class Tracer:
         ev = {"kind": "event", "id": next(self._ids),
               "parent": stack[-1] if stack else 0, "depth": len(stack),
               "name": name, "t": time.perf_counter(),
+              "epoch": time.time(), "pid": os.getpid(),
+              "tid": threading.get_ident(),
               "thread": threading.current_thread().name}
         if fields:
             ev["attrs"] = fields
@@ -121,6 +131,17 @@ class Tracer:
     def to_jsonl(self, last: int | None = None) -> str:
         """The (optionally tail-truncated) ring as JSON lines."""
         evs = self.events()
+        if last is not None:
+            evs = evs[-last:]
+        return "\n".join(json.dumps(e) for e in evs)
+
+    def export(self, since_event_id: int = 0,
+               last: int | None = None) -> str:
+        """JSON lines for events with ``id > since_event_id`` —
+        incremental tailing: feed back the max id you've seen and only
+        newer events come out (ids are monotone, so eviction from the
+        ring can only drop events you would have skipped anyway)."""
+        evs = [e for e in self.events() if e["id"] > since_event_id]
         if last is not None:
             evs = evs[-last:]
         return "\n".join(json.dumps(e) for e in evs)
@@ -162,6 +183,10 @@ class _NullTracer:
         return []
 
     def to_jsonl(self, last: int | None = None) -> str:
+        return ""
+
+    def export(self, since_event_id: int = 0,
+               last: int | None = None) -> str:
         return ""
 
     def clear(self) -> None:

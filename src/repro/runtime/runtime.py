@@ -53,6 +53,10 @@ from repro.obs import metrics as obs_metrics
 from repro.runtime.config import RuntimeConfig
 from repro.runtime.feed import DeviceFeed, host_blocks
 
+# batch feed()'s time-gated history pump (DESIGN.md §14): at most one
+# registry sample per interval, regardless of block rate
+FEED_SAMPLE_INTERVAL_S = 0.25
+
 
 class StreamRuntime:
     """Sharded two-level ingestion: shard_map ranks × vmapped engine lanes."""
@@ -272,17 +276,25 @@ class StreamRuntime:
         ingest = self._ingest_blocks_fn
         # process-level obs (DESIGN.md §12): counts + per-block dispatch
         # latency (async — the cost the feed loop itself pays, not the
-        # device compute it overlaps)
+        # device compute it overlaps). The time-gated sample() pump gives
+        # batch feeds — which own no ServingTier and hence no sampler
+        # thread — the same ring-buffer histories a served tier gets
+        # (DESIGN.md §14), at one history append per interval.
         reg = obs_metrics.DEFAULT
         m_blocks = reg.counter("runtime.feed.blocks")
         m_step = reg.histogram("runtime.feed.step_s")
+        next_sample = _time.perf_counter() + FEED_SAMPLE_INTERVAL_S
         for block in dev:
             if block.shape[-1] == 0:    # empty host block → nothing pending
                 continue
             t0 = _time.perf_counter()
             state = ingest(state, block)
-            m_step.record(_time.perf_counter() - t0)
+            now = _time.perf_counter()
+            m_step.record(now - t0)
             m_blocks.inc()
+            if now >= next_sample:
+                reg.sample(now)
+                next_sample = now + FEED_SAMPLE_INTERVAL_S
             ingest = self._feed_ingest_fn
         return state
 

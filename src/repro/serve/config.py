@@ -21,6 +21,13 @@ Admission policy on a full queue:
   ``"shed"``   the block is dropped and counted
                (``IngestStats.blocks_shed``) — for producers that must
                never stall and can tolerate sampled ingestion.
+
+The drift-sentinel knobs (``timeseries`` / ``drift`` / ``alerts`` /
+``flight_recorder``, DESIGN.md §14) are all gated under ``metrics``:
+with ``metrics=False`` the tier composes the NULL registry and none of
+the sentinel machinery exists — that arm is the overhead gate's
+baseline, and the ≥ 0.97 throughput ratio in ``launch/bench_obs.py`` is
+measured with every sentinel piece ON against it.
 """
 from __future__ import annotations
 
@@ -53,6 +60,19 @@ class ServeConfig:
                                        # metrics-off arm)
     health_k_majority: int = 64        # k' for the guarantee-split
                                        # health gauges (DESIGN.md §12)
+    timeseries: bool = True            # ring-buffer metric histories +
+                                       # the fixed-interval sampler pump
+    sample_interval_s: float = 0.25    # sampler tick (history
+                                       # resolution; ring covers
+                                       # series_capacity ticks)
+    series_capacity: int = 512         # samples kept per instrument
+    drift: bool = True                 # online skew / ε-bound / churn
+                                       # estimation off ring publishes
+    alerts: bool = True                # rule engine on sampler ticks
+    alert_rules: tuple | None = None   # None → obs.alerts.default_rules
+                                       # sized to queue_depth; () → none
+    flight_recorder: bool = True       # postmortem ring + dump triggers
+    flight_path: str = "flight_record.json"  # dump artifact location
 
     def __post_init__(self):
         if self.publish_every is not None and self.publish_every < 1:
@@ -76,6 +96,23 @@ class ServeConfig:
             raise ValueError(
                 f"health_k_majority must be >= 1, got "
                 f"{self.health_k_majority}")
+        if self.sample_interval_s <= 0:
+            raise ValueError(
+                f"sample_interval_s must be > 0, got "
+                f"{self.sample_interval_s}")
+        if self.series_capacity < 2:
+            raise ValueError(
+                f"series_capacity must be >= 2, got "
+                f"{self.series_capacity}")
+
+    def resolved_alert_rules(self) -> tuple:
+        """The rule set the tier's AlertManager loads (None → stock
+        :func:`~repro.obs.alerts.default_rules` sized to this queue)."""
+        if self.alert_rules is not None:
+            return tuple(self.alert_rules)
+        from repro.obs.alerts import default_rules
+        return default_rules(queue_depth=self.queue_depth,
+                             epsilon_frac_max=1.0 / self.health_k_majority)
 
     def resolved_publish_every(self) -> int:
         """Blocks between ring publishes (None → the plan's cadence)."""

@@ -163,7 +163,7 @@ class IngestLoop:
                  publish_every: int, queue_depth: int = 8,
                  admission: str = "block", coalesce_max: int = 1,
                  feed_depth: int = 2, lazy_publish: bool = False,
-                 state=None, registry=None, tracer=None):
+                 state=None, registry=None, tracer=None, on_error=None):
         if publish_every < 1:
             raise ValueError(
                 f"publish_every must be >= 1, got {publish_every}")
@@ -200,6 +200,9 @@ class IngestLoop:
         self._m_coalesce = reg.histogram("serve.ingest.coalesce_blocks")
         self._m_deferred = reg.counter("serve.publish.deferred")
         self._m_materialized = reg.counter("serve.publish.materialized")
+        # invoked (once, from the loop thread) with the captured
+        # exception — the flight recorder's ingest-error dump trigger
+        self.on_error = on_error
         self._publisher = RingPublisher(runtime, ring)
         self._queue: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._state = state if state is not None else runtime.init()
@@ -438,6 +441,13 @@ class IngestLoop:
                         payload.resolve(None)
             except queue.Empty:
                 pass
+            self.tracer.event("ingest.error", type=type(e).__name__,
+                              message=str(e))
+            if self.on_error is not None:
+                try:
+                    self.on_error(e)        # flight-recorder dump
+                except Exception:           # a broken recorder must not
+                    pass                    # mask the original error
 
     def _publish(self) -> QuerySnapshot:
         # timed around the (async or deferred) dispatch + ring swap: this

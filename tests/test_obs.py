@@ -137,6 +137,41 @@ def test_prometheus_export_format():
     assert "step_s_count 1" in text
 
 
+def test_prometheus_histogram_bucket_conformance():
+    # text-format conformance: _bucket series are CUMULATIVE counts per
+    # upper bound, the +Inf bucket equals _count, and bounds ascend
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in (1e-5, 1e-5, 0.02, 0.5, 100.0):
+        h.record(v)
+    lines = [ln for ln in reg.prometheus().splitlines()
+             if ln.startswith("lat_bucket")]
+    les, counts = [], []
+    for ln in lines:
+        le = ln.split('le="')[1].split('"')[0]
+        les.append(float("inf") if le == "+Inf" else float(le))
+        counts.append(int(ln.rsplit(" ", 1)[1]))
+    assert les == sorted(les) and les[-1] == float("inf")
+    assert counts == sorted(counts)            # cumulative, never drops
+    assert counts[-1] == 5                     # +Inf bucket == _count
+    assert "lat_count 5" in reg.prometheus()
+    # the two 1e-5 samples are cumulative from the first bound >= 1e-5
+    idx = next(i for i, b in enumerate(les) if b >= 1e-5)
+    assert counts[idx] >= 2
+
+
+def test_prometheus_label_value_escaping():
+    from repro.obs.metrics import prom_escape_label, prom_sample
+    assert prom_escape_label('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+    line = prom_sample("m_bucket", {"le": 'x"\n\\'}, 7)
+    assert line == 'm_bucket{le="x\\"\\n\\\\"} 7'
+    # round-trip: an exposition-format parser un-escapes to the original
+    quoted = line.split('le="')[1].rsplit('"}', 1)[0]
+    unescaped = (quoted.replace("\\\\", "\x00").replace('\\"', '"')
+                 .replace("\\n", "\n").replace("\x00", "\\"))
+    assert unescaped == 'x"\n\\'
+
+
 def test_null_registry_is_noop():
     reg = obs_metrics.NULL
     c, g, h = reg.counter("a"), reg.gauge("b"), reg.histogram("c")
@@ -179,6 +214,42 @@ def test_trace_ring_bounded_and_jsonl():
     assert [json.loads(ln)["name"] for ln in lines] == ["e17", "e18", "e19"]
     tr.clear()
     assert tr.events() == [] and tr.to_jsonl() == ""
+
+
+def test_trace_events_carry_epoch_pid_tid():
+    import os
+    tr = Tracer()
+    before = time.time()
+    with tr.span("s"):
+        tr.event("e")
+    after = time.time()
+    for e in tr.events():
+        assert before - 1 <= e["epoch"] <= after + 1
+        assert e["pid"] == os.getpid()
+        assert e["tid"] == threading.get_ident()
+    # the span's epoch is its START time: at or before the inner event's
+    span = next(e for e in tr.events() if e["name"] == "s")
+    mark = next(e for e in tr.events() if e["name"] == "e")
+    assert span["epoch"] <= mark["epoch"]
+
+
+def test_trace_incremental_export_since_event_id():
+    tr = Tracer()
+    for i in range(5):
+        tr.event(f"e{i}")
+    cursor = tr.events()[-1]["id"]
+    assert tr.export(since_event_id=cursor) == ""   # nothing new yet
+    tr.event("fresh1")
+    tr.event("fresh2")
+    lines = tr.export(since_event_id=cursor).splitlines()
+    assert [json.loads(ln)["name"] for ln in lines] == ["fresh1",
+                                                        "fresh2"]
+    # default cursor 0 exports everything; last= caps from the tail
+    assert len(tr.export().splitlines()) == 7
+    tail = tr.export(since_event_id=0, last=2).splitlines()
+    assert [json.loads(ln)["name"] for ln in tail] == ["fresh1",
+                                                       "fresh2"]
+    assert obs_trace.NULL.export() == ""
 
 
 def test_log_emits_structured_line():
@@ -336,6 +407,38 @@ def test_health_gauges_skip_stale_versions():
     latest = g.update(old)                     # stale → ignored
     assert latest["version"] == 2
     assert reg.gauge("health.n").value == int(new.n)
+    assert g.skipped_stale == 1
+    assert reg.gauge("health.refreshes_skipped_stale").value == 1
+
+
+def test_health_monitor_age_grows_when_ring_goes_quiet():
+    reg = MetricsRegistry()
+    ring = SnapshotRing(depth=4)
+    rt = StreamRuntime(RuntimeConfig(
+        engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                            buffer_depth=DEPTH, kernel="jnp"),
+        shards=1))
+    state = rt.ingest(rt.init(), host_blocks(_blocks(rt, 1)[0],
+                                             rt.workers, CHUNK))
+    mon = HealthMonitor(ring, reg, k_majority=8, poll_s=0.02).start()
+    try:
+        assert mon.last_refresh_age_s is None  # no refresh yet
+        ring.publish(rt.snapshot(state))
+        t0 = time.perf_counter()
+        while mon.latest() is None:
+            assert time.perf_counter() - t0 < 5.0, "no refresh"
+            time.sleep(0.005)
+        first_age = mon.last_refresh_age_s
+        assert first_age is not None and first_age < 1.0
+        # the ring goes quiet: the age keeps growing and the monitor's
+        # idle ticks keep the exported gauge current
+        time.sleep(0.15)
+        assert mon.last_refresh_age_s >= first_age + 0.1
+        gauge_age = reg.gauge("health.last_refresh_age_s").value
+        assert gauge_age >= 0.05               # ticked past the refresh
+        assert mon.last_refresh_age_s >= gauge_age
+    finally:
+        mon.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -408,14 +511,28 @@ def test_bench_obs_check_gates():
         "overhead": {"ratio": 0.99},
         "health": {"tier": {"n": 1}, "reference": {"n": 1},
                    "mismatches": []},
+        "drift": [{"s_true": 1.5, "s_est": 1.49, "ci_low": 1.45,
+                   "ci_high": 1.55, "within_ci": True}],
+        "flight": {"valid": True, "reason": "ingest_error"},
     }
     assert check_record(record, min_ratio=0.97) == []
     record["overhead"]["ratio"] = 0.9
     record["health"]["mismatches"] = ["n: health gauge 1 != invariant 2"]
+    record["drift"][0]["within_ci"] = False
+    record["flight"] = {"valid": False, "reason": "no dump appeared"}
     failures = check_record(record, min_ratio=0.97)
-    assert len(failures) == 2
+    assert len(failures) == 4
     assert any("overhead SLO" in f for f in failures)
     assert any("health inconsistency" in f for f in failures)
+    assert any("drift estimator missed s=1.5" in f for f in failures)
+    assert any("flight-recorder gate" in f for f in failures)
+    # a record missing the sentinel phases entirely also fails
+    del record["drift"], record["flight"]
+    record["overhead"]["ratio"] = 0.99
+    record["health"]["mismatches"] = []
+    failures = check_record(record, min_ratio=0.97)
+    assert any("no profiles" in f for f in failures)
+    assert any("phase did not run" in f for f in failures)
 
 
 def test_metrics_cli_smoke(capsys):

@@ -1,0 +1,575 @@
+"""Drift sentinel: time series, skew estimation, alerts, flight recorder (§14).
+
+The sentinel's load-bearing contracts:
+
+  * **aggregates ≡ recompute** — every windowed time-series aggregate
+    equals a from-scratch numpy recompute over the raw ring contents
+    (``Series.rows()``), INCLUDING after wrap-around: the aggregates can
+    never drift from the data they summarize;
+  * **drift accuracy** — the online zipf-skew fit brackets the
+    generator's true s inside its own confidence interval on real
+    sketch counters at every committed profile (s ∈ {1.1, 1.5, 2.0}),
+    and the 1401.0702 predicted-ε mapping upper-bounds... behaves as a
+    bound should (≤ n/k, tighter with skew);
+  * **alert lifecycle** — ok → pending (for_s held) → firing → resolved,
+    with transitions (never steady states) counted and traced;
+  * **flight recorder** — bounded frame ring, strict-JSON schema-valid
+    dumps on ingest error / first critical alert / demand, auto-dump
+    exactly once;
+  * **tier integration** — the full sentinel composes into ServingTier,
+    an induced loop error leaves a complete artifact behind, and
+    ``metrics=False`` constructs none of it.
+"""
+import json
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import zipf_stream
+from repro.engine import EngineConfig
+from repro.obs import (AlertManager, AlertRule, DriftEstimator,
+                       FlightRecorder, MetricsRegistry, Tracer,
+                       default_rules, fit_zipf_skew, predicted_min_count,
+                       sketch_health, top_n_churn,
+                       validate_flight_record)
+from repro.obs.recorder import FRAME_KEYS
+from repro.obs.timeseries import (CounterSeries, GaugeSeries,
+                                  HistogramSeries, MetricsSampler,
+                                  SeriesRing, TimeSeriesStore)
+from repro.runtime import RuntimeConfig, StreamRuntime, host_blocks
+from repro.serve import ServeConfig, ServingTier
+
+K, LANES, CHUNK = 256, 2, 512
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return StreamRuntime(RuntimeConfig(
+        engine=EngineConfig(k=K, tenants=LANES, chunk=CHUNK,
+                            buffer_depth=2, kernel="jnp"),
+        shards=1))
+
+
+def _serve_config(rt, **kw):
+    kw.setdefault("publish_every", 2)
+    kw.setdefault("ring_depth", 3)
+    kw.setdefault("sample_interval_s", 0.05)
+    return ServeConfig(runtime=rt.config, **kw)
+
+
+class _FakeCounter:
+    def __init__(self):
+        self.value = 0
+
+
+class _FakeGauge:
+    def __init__(self):
+        self.value = 0.0
+
+
+# ---------------------------------------------------------------------------
+# time series: ring mechanics + aggregate ≡ recompute property
+# ---------------------------------------------------------------------------
+
+def test_series_ring_wraparound_preserves_order():
+    ring = SeriesRing(capacity=8, width=1)
+    for i in range(20):                     # 2.5 rotations
+        ring.append(float(i), i * 10.0)
+    assert len(ring) == 8
+    t, v = ring.rows()
+    assert t.tolist() == [float(i) for i in range(12, 20)]
+    assert v[:, 0].tolist() == [i * 10.0 for i in range(12, 20)]
+
+
+@pytest.mark.parametrize("n_samples", [5, 64, 200])   # wrap at cap=64
+@pytest.mark.parametrize("window_s", [None, 3.0, 17.0, 1e9])
+def test_counter_aggregates_equal_recompute(n_samples, window_s):
+    rng = np.random.default_rng(7)
+    series = CounterSeries("c", capacity=64)
+    inst = _FakeCounter()
+    for i in range(n_samples):
+        inst.value += int(rng.integers(0, 100))
+        series.sample(inst, float(i) * 0.5)
+    got = series.aggregates(window_s)
+    t, v = series.rows()                    # ground truth: raw ring
+    keep = (np.ones_like(t, dtype=bool) if window_s is None
+            else t >= t[-1] - window_s)
+    t, vals = t[keep], v[keep, 0]
+    delta = vals[-1] - vals[0]
+    dt = t[-1] - t[0]
+    assert got["last"] == vals[-1]
+    assert got["delta"] == delta
+    assert got["rate"] == (delta / dt if dt > 0 else 0.0)
+
+
+@pytest.mark.parametrize("n_samples", [3, 64, 150])
+@pytest.mark.parametrize("window_s", [None, 5.0, 1e9])
+def test_gauge_aggregates_equal_recompute(n_samples, window_s):
+    rng = np.random.default_rng(11)
+    series = GaugeSeries("g", capacity=64)
+    inst = _FakeGauge()
+    for i in range(n_samples):
+        inst.value = float(rng.normal())
+        series.sample(inst, float(i) * 0.25)
+    got = series.aggregates(window_s)
+    t, v = series.rows()
+    keep = (np.ones_like(t, dtype=bool) if window_s is None
+            else t >= t[-1] - window_s)
+    vals = v[keep, 0]
+    assert got["last"] == vals[-1]
+    assert got["mean"] == vals.mean()
+    assert got["min"] == vals.min() and got["max"] == vals.max()
+    assert got["p50"] == np.percentile(vals, 50)
+    assert got["p99"] == np.percentile(vals, 99)
+
+
+@pytest.mark.parametrize("window_s", [None, 2.0, 1e9])
+def test_histogram_aggregates_equal_recompute(window_s):
+    from repro.obs.metrics import Histogram
+    from repro.obs.timeseries import _percentile_from_buckets
+
+    rng = np.random.default_rng(3)
+    hist = Histogram("h")
+    series = HistogramSeries("h", hist.bounds, capacity=32)
+    for i in range(50):                     # wraps the 32-slot ring
+        for _ in range(int(rng.integers(1, 20))):
+            hist.record(float(rng.uniform(1e-5, 5.0)))
+        series.sample(hist, float(i) * 0.5)
+    got = series.aggregates(window_s)
+    t, v = series.rows()
+    keep = (np.ones_like(t, dtype=bool) if window_s is None
+            else t >= t[-1] - window_s)
+    t, v = t[keep], v[keep]
+    delta = v[-1, 0] - v[0, 0]
+    dsum = v[-1, 1] - v[0, 1]
+    dbuckets = v[-1, 2:] - v[0, 2:]
+    assert got["last"] == v[-1, 0]
+    assert got["delta"] == delta
+    assert got["rate"] == delta / (t[-1] - t[0])
+    assert got["mean"] == dsum / delta
+    assert got["p50"] == _percentile_from_buckets(series.bounds,
+                                                  dbuckets, 50)
+    assert got["p99"] == _percentile_from_buckets(series.bounds,
+                                                  dbuckets, 99)
+    # windowed percentile is conservative: >= true p50 of window deltas
+    assert got["p99"] >= got["p50"] > 0
+
+
+def test_store_samples_registry_and_rate_ratio():
+    reg = MetricsRegistry()
+    c = reg.counter("ingest.blocks")
+    g = reg.gauge("queue")
+    reg.histogram("lat").record(0.01)
+    # fast phase then slow phase: trailing rate < overall rate
+    t = 0.0
+    for _ in range(50):
+        c.inc(100)
+        g.set(1.0)
+        reg.sample(t)
+        t += 1.0
+    for _ in range(50):
+        c.inc(1)                            # throughput collapse
+        reg.sample(t)
+        t += 1.0
+    store = reg.timeseries
+    assert store.samples == 100
+    assert set(store.names()) >= {"ingest.blocks", "queue", "lat"}
+    ratio = store.value("ingest.blocks", "rate_ratio", 10.0)
+    assert ratio is not None and ratio < 0.1
+    # absent series / absent aggregate → None, not an exception
+    assert store.value("nope", "rate", 1.0) is None
+    assert store.value("queue", "definitely_not", 1.0) is None
+
+
+def test_disabled_registry_store_is_null():
+    from repro.obs.timeseries import NULL_STORE
+    reg = MetricsRegistry(enabled=False)
+    assert reg.timeseries is NULL_STORE
+    assert reg.sample() is None
+    assert reg.timeseries.describe() == {}
+    assert reg.timeseries.value("x") is None
+
+
+def test_sampler_pump_and_hook():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(5)
+    ticks = []
+    sampler = MetricsSampler(reg, interval_s=0.02,
+                             on_sample=ticks.append)
+    sampler.start()
+    time.sleep(0.15)
+    sampler.stop()
+    assert not sampler.running
+    assert reg.timeseries.samples >= 3      # pumped + final tick
+    assert len(ticks) == reg.timeseries.samples
+    assert reg.timeseries.value("c", "last") == 5.0
+
+
+# ---------------------------------------------------------------------------
+# drift: skew fit accuracy, ε-bound mapping, churn, estimator frames
+# ---------------------------------------------------------------------------
+
+def _ingest_zipf(rt, s, n_items, seed):
+    state = rt.init()
+    block_items = rt.workers * CHUNK * 8
+    for i in range(max(1, n_items // block_items)):
+        b = zipf_stream(block_items, s, seed=seed + i, max_id=10**6)
+        state = rt.ingest(state, host_blocks(b, rt.workers, CHUNK))
+    return state
+
+
+def _sketch_fit(rt, state):
+    from repro.core.spacesaving import EMPTY
+    snap = rt.snapshot(state)
+    items = np.asarray(snap.summary.items)
+    counts = np.where(items != EMPTY, np.asarray(snap.summary.counts), 0)
+    return snap, fit_zipf_skew(counts, np.asarray(snap.summary.errors))
+
+
+@pytest.mark.parametrize("s_true", [1.1, 1.5, 2.0])
+def test_skew_fit_brackets_truth_on_sketch_counters(rt, s_true):
+    state = _ingest_zipf(rt, s_true, 120_000, seed=int(s_true * 10))
+    snap, fit = _sketch_fit(rt, state)
+    assert fit["ranks_used"] >= 8
+    assert fit["ci_low"] <= s_true <= fit["ci_high"], fit
+    # the CI is honest, not vacuous: half-width well under the skew gap
+    assert (fit["ci_high"] - fit["ci_low"]) < 0.3
+
+
+def test_fit_zipf_skew_no_signal_is_nan():
+    fit = fit_zipf_skew(np.zeros(64))
+    assert math.isnan(fit["s"]) and fit["ranks_used"] == 0
+    fit = fit_zipf_skew([5.0, 3.0, 1.0])    # < min_ranks live ranks
+    assert math.isnan(fit["s"])
+
+
+def test_predicted_min_count_is_a_skewed_bound():
+    n, k = 10**6, 256
+    uniform = n / k
+    # at any valid skew the bound improves on the skew-free n/k, and
+    # monotonically with skew (more head mass → smaller min counter)
+    preds = [predicted_min_count(n, k, s) for s in (1.1, 1.5, 2.0)]
+    assert all(0 < p <= uniform for p in preds)
+    assert preds[0] > preds[1] > preds[2]
+    # s <= 1: zeta diverges, no finite statement
+    assert math.isnan(predicted_min_count(n, k, 1.0))
+    assert math.isnan(predicted_min_count(n, k, float("nan")))
+
+
+def test_predicted_epsilon_brackets_actual_on_sketch(rt):
+    state = _ingest_zipf(rt, 1.5, 120_000, seed=77)
+    snap, fit = _sketch_fit(rt, state)
+    h = sketch_health(snap)
+    pred = predicted_min_count(h["n"], h["k"], fit["s"])
+    # the bound must hold (with slack for estimation error): the actual
+    # min counter does not exceed the predicted ceiling materially
+    assert h["min_count"] <= 1.5 * pred
+    assert pred <= h["n"] / h["k"]
+
+
+def test_top_n_churn():
+    assert top_n_churn([1, 2, 3], [1, 2, 3]) == 0.0
+    assert top_n_churn([1, 2, 3], [4, 5, 6]) == 1.0
+    assert top_n_churn([1, 2, 3, 4], [1, 2, 9]) == pytest.approx(1 / 3)
+    assert top_n_churn([1, 2], []) == 0.0   # empty current set: no churn
+
+
+def test_drift_estimator_frames_and_burn(rt):
+    reg = MetricsRegistry()
+    est = DriftEstimator(reg, top_n=16)
+    state = _ingest_zipf(rt, 1.5, 60_000, seed=5)
+    snap1 = rt.snapshot(state, version=1)
+    f1 = est.update(snap1, t=10.0)
+    assert f1["version"] == 1
+    assert math.isnan(f1["top_churn"])      # no previous frame yet
+    assert reg.gauge("drift.skew").value == pytest.approx(f1["skew"])
+
+    # same version again: the stored frame is kept, not overwritten
+    assert est.update(snap1, t=11.0) is f1
+
+    state = _ingest_zipf(rt, 1.5, 60_000, seed=6)
+    snap2 = rt.snapshot(state, version=2)
+    f2 = est.update(snap2, t=20.0)
+    assert f2["version"] == 2
+    assert math.isfinite(f2["top_churn"])
+    assert math.isfinite(f2["skew_drift"])
+    assert math.isfinite(f2["occupancy_burn_per_s"])
+    # occupancy already full in both frames → no growth → infinite
+    # time-to-full, or a finite positive projection when still filling
+    ttf = f2["time_to_full_s"]
+    assert ttf >= 0 or math.isinf(ttf)
+    # stale version is ignored
+    assert est.update(snap1, t=30.0) is f2
+    assert est.latest() is f2
+
+
+# ---------------------------------------------------------------------------
+# alerts: lifecycle, for_s hold, defaults
+# ---------------------------------------------------------------------------
+
+def _alert_fixture(rules):
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    g = reg.gauge("pressure")
+    mgr = AlertManager(reg.timeseries, reg, rules=rules, tracer=tracer)
+    return reg, tracer, g, mgr
+
+
+def test_alert_lifecycle_fire_resolve():
+    rule = AlertRule("hot", "pressure", lambda v: v > 10,
+                     for_s=5.0, severity="critical", window_s=30.0)
+    reg, tracer, g, mgr = _alert_fixture([rule])
+    g.set(1.0)
+    reg.sample(0.0)
+    assert mgr.evaluate(0.0) == []
+    assert mgr.describe()["hot"]["state"] == "ok"
+
+    g.set(50.0)                             # breach starts
+    reg.sample(1.0)
+    assert mgr.evaluate(1.0) == []          # pending: for_s not held yet
+    assert mgr.describe()["hot"]["state"] == "pending"
+    reg.sample(3.0)
+    assert mgr.evaluate(3.0) == []          # still held < 5s
+    reg.sample(6.5)
+    fired = mgr.evaluate(6.5)               # held 5.5s >= for_s
+    assert [f["transition"] for f in fired] == ["fire"]
+    assert fired[0]["severity"] == "critical"
+    assert mgr.active()[0]["rule"] == "hot"
+    assert reg.counter("alerts.fired").value == 1
+    assert reg.gauge("alerts.active").value == 1
+
+    g.set(0.0)                              # breach clears
+    reg.sample(7.0)
+    resolved = mgr.evaluate(7.0)
+    assert [f["transition"] for f in resolved] == ["resolve"]
+    assert mgr.active() == []
+    assert reg.counter("alerts.resolved").value == 1
+    assert reg.gauge("alerts.active").value == 0
+    kinds = [e["name"] for e in tracer.events()]
+    assert kinds == ["alert.fire", "alert.resolve"]
+    trans = mgr.transitions()
+    assert [t["transition"] for t in trans] == ["fire", "resolve"]
+
+
+def test_alert_pending_spike_never_fires():
+    rule = AlertRule("spiky", "pressure", lambda v: v > 10, for_s=5.0)
+    reg, _, g, mgr = _alert_fixture([rule])
+    g.set(50.0)
+    reg.sample(0.0)
+    mgr.evaluate(0.0)                       # pending
+    g.set(1.0)                              # one-tick spike clears
+    reg.sample(1.0)
+    assert mgr.evaluate(1.0) == []          # pending → ok, NO resolve
+    assert reg.counter("alerts.fired").value == 0
+    assert reg.counter("alerts.resolved").value == 0
+
+
+def test_alert_no_data_holds_state():
+    rule = AlertRule("ghost", "does.not.exist", lambda v: True)
+    reg, _, _, mgr = _alert_fixture([rule])
+    reg.sample(0.0)
+    assert mgr.evaluate(0.0) == []
+    assert mgr.describe()["ghost"]["state"] == "ok"
+    assert mgr.describe()["ghost"]["value"] is None
+
+
+def test_alert_rule_validation_and_duplicates():
+    with pytest.raises(ValueError, match="severity"):
+        AlertRule("x", "m", lambda v: True, severity="apocalyptic")
+    with pytest.raises(ValueError, match="for_s"):
+        AlertRule("x", "m", lambda v: True, for_s=-1)
+    reg, _, _, mgr = _alert_fixture([AlertRule("a", "m", lambda v: True)])
+    with pytest.raises(ValueError, match="duplicate"):
+        mgr.add_rule(AlertRule("a", "m", lambda v: True))
+
+
+def test_default_rules_cover_the_issue_set():
+    rules = default_rules(queue_depth=4)
+    names = {r.name for r in rules}
+    assert names == {"ingest_throughput_regression",
+                     "queue_depth_pressure", "health_staleness",
+                     "sketch_saturation", "skew_drift"}
+    # stock rules never auto-dump a healthy-but-idle tier
+    assert all(r.severity != "critical" for r in rules)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: ring, dumps, triggers, schema
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_is_bounded_and_dump_validates(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc(3)
+    path = str(tmp_path / "flight.json")
+    rec = FlightRecorder(reg, capacity=4, path=path)
+    for i in range(10):
+        rec.capture(float(i))
+    assert len(rec.frames()) == 4           # bounded postmortem ring
+    assert rec.frames()[0]["t"] == 6.0      # oldest evicted first
+    out = rec.dump()
+    assert out == path
+    record = json.loads((tmp_path / "flight.json").read_text())
+    validate_flight_record(record)
+    assert record["reason"] == "on_demand"
+    assert len(record["frames"]) == 4
+    for frame in record["frames"]:
+        assert set(FRAME_KEYS) <= set(frame)
+    assert record["metrics"]["c"]["value"] == 3
+
+
+def test_recorder_strict_json_unboxes_numpy_and_nan(tmp_path):
+    reg = MetricsRegistry()
+    rec = FlightRecorder(
+        reg, path=str(tmp_path / "f.json"),
+        health_source=lambda: {"n": np.int64(7),
+                               "frac": np.float64(0.5),
+                               "bad": float("nan"),
+                               "worse": float("inf")})
+    rec.capture(0.0)
+    path = rec.dump()
+    # strict JSON: parseable with NaN/Infinity constants REJECTED
+    def _no_const(x):
+        raise ValueError(f"non-strict constant {x}")
+    record = json.loads(open(path).read(), parse_constant=_no_const)
+    h = record["health"]
+    assert h["n"] == 7 and h["frac"] == 0.5
+    assert h["bad"] is None and h["worse"] is None
+
+
+def test_recorder_auto_dump_once(tmp_path):
+    reg = MetricsRegistry()
+    rec = FlightRecorder(reg, path=str(tmp_path / "f.json"))
+    rec.capture(0.0)
+    p1 = rec.on_error(RuntimeError("boom"))
+    assert p1 is not None
+    record = json.loads(open(p1).read())
+    assert record["reason"] == "ingest_error"
+    assert record["error"]["type"] == "RuntimeError"
+    assert "boom" in record["error"]["message"]
+    # second auto trigger suppressed; on-demand still works
+    assert rec.on_error(RuntimeError("again")) is None
+    assert rec.on_alert({"severity": "critical", "rule": "r"}) is None
+    assert rec.dump(path=str(tmp_path / "g.json")) is not None
+
+
+def test_recorder_critical_alert_trigger(tmp_path):
+    reg = MetricsRegistry()
+    g = reg.gauge("pressure")
+    mgr = AlertManager(reg.timeseries, reg, rules=[
+        AlertRule("warn", "pressure", lambda v: v > 1,
+                  severity="warning"),
+        AlertRule("crit", "pressure", lambda v: v > 10,
+                  severity="critical")])
+    rec = FlightRecorder(reg, alerts=mgr, path=str(tmp_path / "f.json"))
+    mgr.on_fire = rec.on_alert
+    g.set(5.0)                              # warning only: no dump
+    reg.sample(0.0)
+    mgr.evaluate(0.0)
+    assert rec.last_dump_path is None
+    g.set(50.0)                             # critical fires → dump
+    reg.sample(1.0)
+    mgr.evaluate(1.0)
+    assert rec.last_dump_path is not None
+    record = validate_flight_record(json.loads(
+        open(rec.last_dump_path).read()))
+    assert record["reason"] == "critical_alert:crit"
+    names = {t["rule"] for t in record["alerts"]["transitions"]}
+    assert {"warn", "crit"} <= names
+
+
+def test_validate_flight_record_rejects_incomplete():
+    with pytest.raises(ValueError, match="missing keys"):
+        validate_flight_record({"schema": "repro.flight_record/v1"})
+    with pytest.raises(ValueError, match="schema"):
+        validate_flight_record({k: None for k in
+                                ("schema", "reason", "epoch", "pid",
+                                 "frames", "spans", "alerts", "metrics",
+                                 "error")} | {"schema": "bogus",
+                                              "frames": []})
+    with pytest.raises(ValueError, match="frame 0"):
+        validate_flight_record({
+            "schema": "repro.flight_record/v1", "reason": "x",
+            "epoch": 0, "pid": 1, "spans": [], "alerts": {},
+            "metrics": {}, "error": None, "frames": [{"t": 0}]})
+
+
+# ---------------------------------------------------------------------------
+# tier integration: the sentinel composed end to end
+# ---------------------------------------------------------------------------
+
+class _Poison:
+    def __array__(self, dtype=None, copy=None):
+        raise RuntimeError("sentinel test induced failure")
+
+
+def test_tier_sentinel_surface_and_on_demand_dump(rt, tmp_path):
+    cfg = _serve_config(rt, flight_path=str(tmp_path / "flight.json"))
+    with ServingTier(cfg, runtime=rt) as tier:
+        assert tier.sampler is not None and tier.sampler.running
+        assert tier.drift is not None and tier.alerts is not None
+        for i in range(6):
+            tier.submit(zipf_stream(rt.workers * CHUNK, 1.3,
+                                    seed=40 + i, max_id=10**5))
+        tier.drain()
+        tier.health_report()
+        time.sleep(0.2)                     # a few sampler ticks
+        path = tier.dump_flight_record()
+        desc = tier.describe()
+    assert not tier.sampler.running         # stopped with the tier
+    record = validate_flight_record(json.loads(open(path).read()))
+    assert record["reason"] == "on_demand"
+    assert len(record["frames"]) >= 1
+    assert desc["drift"] is not None and desc["drift"]["n"] > 0
+    assert desc["alerts"] and "health_staleness" in desc["alerts"]
+    assert desc["timeseries"]["serve.ingest.blocks"]["samples"] >= 1
+    assert desc["flight"]["last_dump"] == path
+
+
+def test_tier_induced_error_dumps_flight_record(rt, tmp_path):
+    path = str(tmp_path / "crash.json")
+    cfg = _serve_config(rt, flight_path=path)
+    tier = ServingTier(cfg, runtime=rt).start()
+    tier.submit(zipf_stream(rt.workers * CHUNK, 1.3, seed=9,
+                            max_id=10**5))
+    tier.drain()
+    tier.submit(_Poison())
+    deadline = time.perf_counter() + 10.0
+    while (time.perf_counter() < deadline
+           and tier.recorder.last_dump_path is None):
+        time.sleep(0.02)
+    with pytest.raises(RuntimeError):
+        tier.stop(drain=False)
+    assert tier.recorder.last_dump_path == path
+    record = validate_flight_record(json.loads(open(path).read()))
+    assert record["reason"] == "ingest_error"
+    assert record["error"]["type"] == "RuntimeError"
+    assert "induced failure" in record["error"]["traceback"]
+    # the monitors were shut down despite the loop error
+    assert not tier.sampler.running
+    assert not tier.health.running
+
+
+def test_tier_metrics_off_builds_no_sentinel(rt):
+    cfg = _serve_config(rt, metrics=False)
+    with ServingTier(cfg, runtime=rt) as tier:
+        tier.submit(zipf_stream(rt.workers * CHUNK, 1.3, seed=1,
+                                max_id=10**5))
+        tier.drain()
+    assert tier.sampler is None and tier.drift is None
+    assert tier.alerts is None and tier.recorder is None
+    d = tier.describe()
+    assert d["drift"] is None and d["alerts"] is None
+    assert d["timeseries"] is None and d["flight"] is None
+    assert tier.dump_flight_record() is None
+
+
+def test_tier_sentinel_knobs_gate_pieces(rt):
+    cfg = _serve_config(rt, timeseries=False, drift=False, alerts=False,
+                        flight_recorder=False)
+    tier = ServingTier(cfg, runtime=rt)
+    assert tier.sampler is None and tier.drift is None
+    assert tier.alerts is None and tier.recorder is None
+    assert tier.health is not None          # plain health still on
